@@ -1,0 +1,63 @@
+"""Kernel microbenchmarks (CPU wall-clock is indicative only; the
+structural comparison -- op counts, shapes -- carries to TPU, see
+EXPERIMENTS.md SPerf)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bench(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def query_kernel_vs_jnp(b=4096, l=64, seed=0):
+    """Pallas spc_query (interpret mode) vs the jnp intersection path."""
+    from repro.kernels.spc_query.kernel import spc_query_pallas
+    from repro.kernels.spc_query.ref import spc_query_ref
+    r = np.random.default_rng(seed)
+    hub = lambda: jnp.asarray(np.sort(r.integers(0, 500, (b, l))), jnp.int32)
+    dist = lambda: jnp.asarray(r.integers(0, 20, (b, l)), jnp.int32)
+    cnt = lambda: jnp.asarray(r.integers(1, 9, (b, l)), jnp.float32)
+    args = (hub(), dist(), cnt(), hub(), dist(), cnt())
+    t_ref = _bench(jax.jit(spc_query_ref), *args)
+    t_pal = _bench(lambda *a: spc_query_pallas(*a, interpret=True), *args)
+    rows = [{"name": "spc_query", "batch": b, "l_cap": l,
+             "jnp_us_per_q": round(t_ref / b * 1e6, 3),
+             "pallas_interp_us_per_q": round(t_pal / b * 1e6, 3)}]
+    _print(rows)
+    return rows
+
+
+def segment_matmul_vs_segment_sum(e=16384, n=2048, d=128, seed=0):
+    from repro.kernels.segment_matmul.kernel import segment_matmul_pallas
+    r = np.random.default_rng(seed)
+    vals = jnp.asarray(r.normal(size=(e, d)), jnp.float32)
+    dst = jnp.asarray(np.sort(r.integers(0, n, e)), jnp.int32)
+    f_ref = jax.jit(lambda v, s: jax.ops.segment_sum(v, s, num_segments=n))
+    t_ref = _bench(f_ref, vals, dst)
+    t_pal = _bench(lambda v, s: segment_matmul_pallas(
+        v, s, num_segments=n, interpret=True), vals, dst)
+    rows = [{"name": "segment_matmul", "edges": e, "nodes": n, "d": d,
+             "segment_sum_ms": round(t_ref * 1e3, 3),
+             "pallas_interp_ms": round(t_pal * 1e3, 3)}]
+    _print(rows)
+    return rows
+
+
+def _print(rows):
+    cols = list(rows[0])
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+    print()

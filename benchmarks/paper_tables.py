@@ -1,0 +1,305 @@
+"""One benchmark per paper table/figure (Section 4), at CPU-friendly
+scale: the container has no TPU and the paper's graphs are up to 150M
+edges, so each experiment runs on synthetic power-law graphs of
+configurable size and reports the same *quantities* the paper reports.
+
+  table4    -- index size / build time / avg IncSPC / DecSPC time,
+               vs reconstruction (the paper's headline speedup).
+  figure7   -- update-time percentiles + query time vs BiBFS.
+  figure8_9 -- label-change breakdown (RenewC / RenewD / Insert /
+               Remove) per update type.
+  figure10  -- streaming hybrid updates: accumulated time + index size.
+  figure11  -- update time vs inserted/deleted edge degree product.
+  table5    -- average |SR_a| / |SR_b| / |R_a| / |R_b|.
+
+Each function returns a list of dict rows and prints CSV.  The JAX path
+(``DynamicSPC``) is the system under test; ``refimpl`` is the
+paper-faithful sequential baseline.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import refimpl as R
+from repro.core.dynamic import DynamicSPC
+from repro.data import graph_stream, random_graph_edges
+
+
+def _timer():
+    return time.perf_counter()
+
+
+def _print_rows(name: str, rows: List[Dict]):
+    if not rows:
+        print(f"# {name}: no rows")
+        return
+    cols = list(rows[0])
+    print(f"# {name}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+    print()
+
+
+def _fresh_edge(rng, n, present):
+    while True:
+        a, b = rng.integers(0, n, 2)
+        key = (min(int(a), int(b)), max(int(a), int(b)))
+        if a != b and key not in present:
+            return key
+
+
+# -------------------------------------------------------------------------
+def table4(sizes=((200, 500), (400, 1200), (800, 3000)), n_updates=10,
+           seed=0) -> List[Dict]:
+    """Index size (MB eq.), build time, avg inc/dec update time, speedup."""
+    rows = []
+    for n, m in sizes:
+        edges = random_graph_edges(n, m, seed=seed)
+        svc = DynamicSPC(n, edges, l_cap=32)
+        t0 = _timer()
+        svc.rebuild()
+        build_s = _timer() - t0
+        rng = np.random.default_rng(seed)
+        present = set(edges)
+        # warm the jit caches (the paper reports steady-state updates)
+        wa, wb = _fresh_edge(rng, n, present)
+        present.add((wa, wb))
+        svc.insert_edge(wa, wb)
+        svc.delete_edge(wa, wb)
+        present.discard((wa, wb))
+        # incremental updates
+        t_inc = []
+        for _ in range(n_updates):
+            a, b = _fresh_edge(rng, n, present)
+            present.add((a, b))
+            t0 = _timer()
+            svc.insert_edge(a, b)
+            t_inc.append(_timer() - t0)
+        # decremental updates
+        t_dec = []
+        eds = sorted(present)
+        for i in range(n_updates):
+            a, b = eds[rng.integers(0, len(eds))]
+            if (a, b) not in present:
+                continue
+            present.discard((a, b))
+            eds = sorted(present)
+            t0 = _timer()
+            svc.delete_edge(a, b)
+            t_dec.append(_timer() - t0)
+        rows.append({
+            "n": n, "m": m,
+            "index_entries": svc.index_entries(),
+            "index_mb": round(svc.index_bytes() / 2**20, 4),
+            "build_s": round(build_s, 4),
+            "inc_avg_s": round(float(np.mean(t_inc)), 5),
+            "dec_avg_s": round(float(np.mean(t_dec)), 5),
+            "speedup_inc_vs_rebuild": round(build_s / max(np.mean(t_inc),
+                                                          1e-9), 1),
+            "speedup_dec_vs_rebuild": round(build_s / max(np.mean(t_dec),
+                                                          1e-9), 1),
+        })
+    _print_rows("table4_update_times", rows)
+    return rows
+
+
+# -------------------------------------------------------------------------
+def figure7(n=400, m=1200, n_updates=15, n_queries=200, seed=1) -> List[Dict]:
+    """Update-time percentiles + query time: SPC-Index vs BiBFS."""
+    edges = random_graph_edges(n, m, seed=seed)
+    svc = DynamicSPC(n, edges, l_cap=32)
+    rng = np.random.default_rng(seed)
+    present = set(edges)
+    wa, wb = _fresh_edge(rng, n, present)   # jit warmup
+    present.add((wa, wb))
+    svc.insert_edge(wa, wb)
+    t_inc = []
+    for _ in range(n_updates):
+        a, b = _fresh_edge(rng, n, present)
+        present.add((a, b))
+        t0 = _timer()
+        svc.insert_edge(a, b)
+        t_inc.append(_timer() - t0)
+    rows = [{
+        "metric": "inc_update_s",
+        "p25": round(float(np.percentile(t_inc, 25)), 5),
+        "median": round(float(np.median(t_inc)), 5),
+        "p75": round(float(np.percentile(t_inc, 75)), 5),
+    }]
+    # query timing: batched index queries vs sequential BiBFS
+    s = rng.integers(0, n, n_queries)
+    t = rng.integers(0, n, n_queries)
+    svc.query_batch(s, t)[0].block_until_ready()  # warm the jit cache
+    t0 = _timer()
+    d_idx, c_idx = svc.query_batch(s, t)
+    d_idx.block_until_ready()
+    idx_per_query = (_timer() - t0) / n_queries
+    ref = R.RefGraph(n, sorted(present))
+    t0 = _timer()
+    for si, ti in zip(s[:50], t[:50]):
+        R.bibfs_spc(ref, int(si), int(ti))
+    bibfs_per_query = (_timer() - t0) / 50
+    rows.append({"metric": "query_us_index",
+                 "p25": "", "median": round(idx_per_query * 1e6, 2),
+                 "p75": ""})
+    rows.append({"metric": "query_us_bibfs",
+                 "p25": "", "median": round(bibfs_per_query * 1e6, 2),
+                 "p75": ""})
+    _print_rows("figure7_distributions", rows)
+    return rows
+
+
+# -------------------------------------------------------------------------
+def _index_delta(before: dict, after: dict) -> Dict[str, int]:
+    """Classify label changes between two {v: {h: (d, c)}} snapshots."""
+    renew_c = renew_d = insert = remove = 0
+    for v, labs in after.items():
+        old = before.get(v, {})
+        for h, (d, c) in labs.items():
+            if h not in old:
+                insert += 1
+            elif old[h][0] != d:
+                renew_d += 1
+            elif old[h][1] != c:
+                renew_c += 1
+    for v, labs in before.items():
+        new = after.get(v, {})
+        remove += sum(1 for h in labs if h not in new)
+    return {"RenewC": renew_c, "RenewD": renew_d, "Insert": insert,
+            "Remove": remove}
+
+
+def _snapshot(svc: DynamicSPC) -> dict:
+    hub = np.asarray(svc.index.hub)
+    dist = np.asarray(svc.index.dist)
+    cnt = np.asarray(svc.index.cnt)
+    size = np.asarray(svc.index.size)
+    return {v: {int(hub[v, j]): (int(dist[v, j]), int(cnt[v, j]))
+                for j in range(size[v])} for v in range(svc.n)}
+
+
+def figure8_9(n=300, m=800, n_updates=8, seed=2) -> List[Dict]:
+    """Average label-change counts per update type."""
+    edges = random_graph_edges(n, m, seed=seed)
+    svc = DynamicSPC(n, edges, l_cap=32)
+    rng = np.random.default_rng(seed)
+    present = set(edges)
+    agg = {"inc": {"RenewC": 0, "RenewD": 0, "Insert": 0, "Remove": 0},
+           "dec": {"RenewC": 0, "RenewD": 0, "Insert": 0, "Remove": 0}}
+    for _ in range(n_updates):
+        a, b = _fresh_edge(rng, n, present)
+        present.add((a, b))
+        before = _snapshot(svc)
+        svc.insert_edge(a, b)
+        for k, v in _index_delta(before, _snapshot(svc)).items():
+            agg["inc"][k] += v
+    for _ in range(n_updates):
+        eds = sorted(present)
+        a, b = eds[rng.integers(0, len(eds))]
+        present.discard((a, b))
+        before = _snapshot(svc)
+        svc.delete_edge(a, b)
+        for k, v in _index_delta(before, _snapshot(svc)).items():
+            agg["dec"][k] += v
+    rows = []
+    for kind in ("inc", "dec"):
+        row = {"update": kind}
+        row.update({k: round(v / n_updates, 2) for k, v in agg[kind].items()})
+        rows.append(row)
+    _print_rows("figure8_9_label_changes", rows)
+    return rows
+
+
+# -------------------------------------------------------------------------
+def figure10(n=300, m=800, n_insert=20, n_delete=4, seed=3) -> List[Dict]:
+    """Streaming hybrid updates: accumulated time + index-size change."""
+    edges = random_graph_edges(n, m, seed=seed)
+    svc = DynamicSPC(n, edges, l_cap=32)
+    events = graph_stream(edges, n, n_insert, n_delete, seed=seed)
+    size0 = svc.index_bytes()
+    acc = 0.0
+    rows = []
+    for i, (op, a, b) in enumerate(events):
+        t0 = _timer()
+        if op == "+":
+            svc.insert_edge(a, b)
+        else:
+            svc.delete_edge(a, b)
+        acc += _timer() - t0
+        if (i + 1) % 6 == 0 or i == len(events) - 1:
+            rows.append({"event": i + 1, "op": op,
+                         "accumulated_s": round(acc, 4),
+                         "index_delta_kb": round(
+                             (svc.index_bytes() - size0) / 1024, 2)})
+    _print_rows("figure10_streaming", rows)
+    return rows
+
+
+# -------------------------------------------------------------------------
+def figure11(n=300, m=900, n_each=8, seed=4) -> List[Dict]:
+    """Update time vs deg(u) * deg(v) of the touched edge."""
+    edges = random_graph_edges(n, m, seed=seed)
+    svc = DynamicSPC(n, edges, l_cap=32)
+    rng = np.random.default_rng(seed)
+    present = set(edges)
+    deg = np.zeros(n, dtype=np.int64)
+    for a, b in edges:
+        deg[a] += 1
+        deg[b] += 1
+    rows = []
+    for _ in range(n_each):
+        a, b = _fresh_edge(rng, n, present)
+        present.add((a, b))
+        t0 = _timer()
+        svc.insert_edge(a, b)
+        dt = _timer() - t0
+        rows.append({"op": "+", "deg_product": int(deg[a] * deg[b]),
+                     "time_s": round(dt, 5)})
+        deg[a] += 1
+        deg[b] += 1
+    for _ in range(n_each):
+        eds = sorted(present)
+        a, b = eds[rng.integers(0, len(eds))]
+        present.discard((a, b))
+        t0 = _timer()
+        svc.delete_edge(a, b)
+        dt = _timer() - t0
+        rows.append({"op": "-", "deg_product": int(deg[a] * deg[b]),
+                     "time_s": round(dt, 5)})
+        deg[a] -= 1
+        deg[b] -= 1
+    _print_rows("figure11_skewed", rows)
+    return rows
+
+
+# -------------------------------------------------------------------------
+def table5(n=300, m=800, n_edges_tested=10, seed=5) -> List[Dict]:
+    """Average SR/R set sizes (uses the reference implementation, whose
+    sets are exact per Definition 3.10/3.12)."""
+    edges = random_graph_edges(n, m, seed=seed)
+    g = R.RefGraph(n, edges)
+    idx = R.hp_spc(g)
+    rng = np.random.default_rng(seed)
+    sra = srb = ra = rb = 0
+    eds = list(edges)
+    for _ in range(n_edges_tested):
+        a, b = eds[rng.integers(0, len(eds))]
+        sr_a, sr_b, r_a, r_b = R.srr_sets(g, idx, a, b)
+        # paper convention: SR_a is the larger side
+        if len(sr_b) > len(sr_a):
+            sr_a, sr_b, r_a, r_b = sr_b, sr_a, r_b, r_a
+        sra += len(sr_a)
+        srb += len(sr_b)
+        ra += len(r_a)
+        rb += len(r_b)
+    k = n_edges_tested
+    rows = [{"SR_a": round(sra / k, 1), "SR_b": round(srb / k, 1),
+             "R_a": round(ra / k, 1), "R_b": round(rb / k, 1),
+             "SR_over_R": round((sra + srb) / max(ra + rb, 1), 3)}]
+    _print_rows("table5_srr_sizes", rows)
+    return rows

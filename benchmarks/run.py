@@ -1,0 +1,51 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Runs one experiment per paper table/figure (Section 4) at CPU scale plus
+the kernel microbenches.  ``--fast`` shrinks sizes further (CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table4,figure7,figure8_9,figure10,"
+                         "figure11,table5,kernels")
+    args = ap.parse_args()
+
+    from benchmarks import kernels_bench, paper_tables as P
+
+    wanted = set(args.only.split(",")) if args.only else None
+
+    def go(name, fn, **kw):
+        if wanted and name not in wanted:
+            return
+        t0 = time.perf_counter()
+        fn(**kw)
+        print(f"## {name} done in {time.perf_counter() - t0:.1f}s\n")
+
+    if args.fast:
+        go("table4", P.table4, sizes=((120, 300), (240, 700)), n_updates=5)
+        go("figure7", P.figure7, n=200, m=600, n_updates=8, n_queries=100)
+        go("figure8_9", P.figure8_9, n=150, m=400, n_updates=4)
+        go("figure10", P.figure10, n=150, m=400, n_insert=8, n_delete=2)
+        go("figure11", P.figure11, n=150, m=450, n_each=4)
+        go("table5", P.table5, n=150, m=400, n_edges_tested=5)
+    else:
+        go("table4", P.table4)
+        go("figure7", P.figure7)
+        go("figure8_9", P.figure8_9)
+        go("figure10", P.figure10)
+        go("figure11", P.figure11)
+        go("table5", P.table5)
+    go("kernels", lambda: (kernels_bench.query_kernel_vs_jnp(),
+                           kernels_bench.segment_matmul_vs_segment_sum()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""repro: DSPC (Dynamic Shortest Path Counting) on a production JAX substrate.
+
+The package implements the paper
+
+    "DSPC: Efficiently Answering Shortest Path Counting on Dynamic Graphs"
+    (Feng, Peng, Zhang, Lin, Zhang; 2023)
+
+as a first-class feature of a multi-pod JAX training/serving framework:
+
+* ``repro.core``      -- the paper's contribution: SPC-Index (2-hop hub
+                         labeling for shortest-path counting), HP-SPC
+                         construction, IncSPC / DecSPC dynamic maintenance,
+                         plus sharded (shard_map) variants.
+* ``repro.kernels``   -- Pallas TPU kernels for the compute hot spots
+                         (batched label-intersection queries, segment
+                         one-hot matmul message passing, flash decode,
+                         embedding bag).
+* ``repro.models``    -- the assigned architecture pool (LM transformers
+                         with GQA/MLA/MoE, equivariant & message-passing
+                         GNNs, DIEN recsys).
+* ``repro.train``     -- optimizer (ZeRO-sharded AdamW), checkpointing,
+                         fault-tolerant training loop.
+* ``repro.launch``    -- production meshes, the multi-pod dry-run and the
+                         roofline extraction used by EXPERIMENTS.md.
+
+NOTE on x64: shortest-path *counts* grow combinatorially (the paper encodes
+them in 29 bits and evaluates 58-bit products at query time).  We therefore
+enable 64-bit mode globally; all model code passes explicit dtypes
+(bf16/f32) everywhere, so the flag only affects the counting core.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "0.1.0"

@@ -1,0 +1,38 @@
+"""Architecture registry: ``get("<arch-id>")`` -> ArchSpec.
+
+The 10 assigned architectures + the paper's own ``dspc`` workload.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.common import ArchSpec, FAMILY_SHAPES, ShapeSpec
+
+_MODULES = {
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "egnn": "repro.configs.egnn",
+    "pna": "repro.configs.pna",
+    "nequip": "repro.configs.nequip",
+    "equiformer-v2": "repro.configs.equiformer_v2",
+    "dien": "repro.configs.dien",
+    "dspc": "repro.configs.dspc",
+}
+
+ARCH_IDS = tuple(_MODULES)
+ASSIGNED_ARCH_IDS = tuple(a for a in ARCH_IDS if a != "dspc")
+
+
+def get(arch_id: str) -> ArchSpec:
+    if arch_id not in _MODULES:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {', '.join(ARCH_IDS)}")
+    return importlib.import_module(_MODULES[arch_id]).SPEC
+
+
+def all_specs():
+    return {a: get(a) for a in ARCH_IDS}

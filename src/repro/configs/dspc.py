@@ -1,0 +1,24 @@
+"""dspc: the paper's own workload (dynamic SPC-Index maintenance) as a
+config next to the assigned pool, so ``--arch dspc`` drives the core."""
+
+import dataclasses
+
+from repro.configs.common import ArchSpec, DSPC_SHAPES
+
+
+@dataclasses.dataclass(frozen=True)
+class DSPCArchConfig:
+    name: str = "dspc"
+    n: int = 65536            # vertices (dry-run scale)
+    m: int = 524288           # undirected edges
+    l_cap: int = 64           # label capacity per vertex
+    query_batch: int = 1_048_576
+
+
+CONFIG = DSPCArchConfig()
+SMOKE = DSPCArchConfig(name="dspc-smoke", n=64, m=160, l_cap=16,
+                       query_batch=256)
+
+SPEC = ArchSpec(arch_id="dspc", family="dspc", config=CONFIG, smoke=SMOKE,
+                shapes=DSPC_SHAPES,
+                source="this paper (Feng et al., 2023)")

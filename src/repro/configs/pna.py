@@ -1,0 +1,13 @@
+"""pna [arXiv:2004.05718]: n_layers=4 d_hidden=75,
+aggregators=mean-max-min-std, scalers=id-amp-atten."""
+
+import dataclasses
+
+from repro.configs.common import ArchSpec, GNN_SHAPES
+from repro.models.gnn.pna import PNAConfig
+
+CONFIG = PNAConfig(name="pna", n_layers=4, d_hidden=75)
+SMOKE = dataclasses.replace(CONFIG, n_layers=2, d_hidden=8, d_in=4)
+
+SPEC = ArchSpec(arch_id="pna", family="gnn", config=CONFIG, smoke=SMOKE,
+                shapes=GNN_SHAPES, source="arXiv:2004.05718; paper")

@@ -1,0 +1,21 @@
+"""qwen2-7b [arXiv:2407.10671; hf]: dense 28L d_model=3584 28H
+(GQA kv=4) d_ff=18944 vocab=152064, QKV bias."""
+
+from repro.configs.common import ArchSpec, LM_SHAPES
+from repro.models.transformer import TransformerConfig
+
+CONFIG = TransformerConfig(
+    name="qwen2-7b",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, d_ff=18944,
+    vocab=152064, d_head=128, attn="gqa", qkv_bias=True,
+)
+
+SMOKE = TransformerConfig(
+    name="qwen2-7b-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=512,
+    d_head=16, attn="gqa", qkv_bias=True, tp=2, max_seq=64,
+)
+
+SPEC = ArchSpec(arch_id="qwen2-7b", family="lm", config=CONFIG,
+                smoke=SMOKE, shapes=LM_SHAPES,
+                source="arXiv:2407.10671; hf")

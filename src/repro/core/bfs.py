@@ -1,0 +1,150 @@
+"""Level-synchronous SPC-counting BFS over the edge list.
+
+One BFS level = one relaxation of the *whole* directed edge list:
+
+    contribution[w] = sum over edges (v, w) with v in frontier of cnt[v]
+
+implemented as a segment-sum keyed by edge destination.  This is the
+TPU-native replacement for the paper's FIFO queue (see DESIGN.md): the
+frontier becomes a boolean vector, a level becomes a dense map-reduce, and
+the queue-order count accumulation of Algorithms 3/5/6 (``C[w] += C[v]``
+for same-level parents) is exactly the segment-sum semantics.
+
+Pruning contract: ``dbar`` is precomputed per BFS (constant during one
+hub's search -- see ``repro.core.query.one_to_all``); a vertex discovered
+at distance d is pruned iff ``dbar[v] < d``.  Pruned vertices keep their
+(dist, cnt) so they are not re-discovered, but they never expand and are
+excluded from the ``keep`` mask handed to the label-update pass.
+
+The relaxation is routed through ``repro.kernels.segment_matmul`` when the
+kernel path is enabled; the default is ``jax.ops.segment_sum`` which XLA
+lowers to a sorted scatter-add.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import INF, Graph
+
+
+class BFSResult(NamedTuple):
+    dist: jax.Array   # int32[n + 1] (INF where unreached)
+    cnt: jax.Array    # int64[n + 1]
+    keep: jax.Array   # bool[n + 1]: visited AND not pruned
+    levels: jax.Array  # int32: number of relaxation rounds executed
+
+
+def relax(g: Graph, cnt: jax.Array, frontier: jax.Array) -> jax.Array:
+    """One edge relaxation: per-destination sums of frontier counts."""
+    contrib = jnp.where(frontier[g.src], cnt[g.src], jnp.int64(0))
+    return jax.ops.segment_sum(contrib, g.dst, num_segments=g.n + 1)
+
+
+def pruned_spc_bfs(
+    g: Graph,
+    root,
+    root_dist,
+    root_cnt,
+    dbar: jax.Array,
+    rank_floor=None,
+    max_levels: int | None = None,
+) -> BFSResult:
+    """Pruned counting BFS used by construction, IncSPC and DecSPC.
+
+    Args:
+      g: the graph (edge list).
+      root: seed vertex (traced ok).
+      root_dist / root_cnt: seed distance / count (Algorithm 3 starts at
+        ``d + 1`` / ``c`` rather than 0 / 1).
+      dbar: int32[n + 1] pruning distances (full or Pre query against the
+        current hub, precomputed once).
+      rank_floor: if given, only vertices with id >= rank_floor may be
+        discovered (the paper's ``h <= w`` rank pruning).
+      max_levels: loop bound (defaults to n, the worst-case diameter).
+    """
+    n1 = g.n + 1
+    ids = jnp.arange(n1, dtype=jnp.int32)
+    eligible = ids < g.n  # never the dump row
+    if rank_floor is not None:
+        eligible &= ids >= jnp.asarray(rank_floor, jnp.int32)
+
+    dist = jnp.full(n1, INF, dtype=jnp.int32).at[root].set(
+        jnp.asarray(root_dist, jnp.int32))
+    cnt = jnp.zeros(n1, dtype=jnp.int64).at[root].set(
+        jnp.asarray(root_cnt, jnp.int64))
+    root_keep = dbar[root] >= jnp.asarray(root_dist, jnp.int32)
+    frontier = jnp.zeros(n1, dtype=bool).at[root].set(root_keep)
+    keep = frontier
+    level = jnp.asarray(root_dist, jnp.int32)
+    if max_levels is None:
+        max_levels = g.n
+
+    def cond(state):
+        _, _, frontier, _, level, rounds = state
+        return jnp.any(frontier) & (rounds < max_levels)
+
+    def body(state):
+        dist, cnt, frontier, keep, level, rounds = state
+        sums = relax(g, cnt, frontier)
+        newly = (sums > 0) & (dist == INF) & eligible
+        dist = jnp.where(newly, level + 1, dist)
+        cnt = jnp.where(newly, sums, cnt)
+        pruned = newly & (dbar < dist)
+        frontier = newly & ~pruned
+        keep = keep | frontier
+        return dist, cnt, frontier, keep, level + 1, rounds + 1
+
+    dist, cnt, frontier, keep, level, rounds = jax.lax.while_loop(
+        cond, body, (dist, cnt, frontier, keep, level, jnp.int32(0)))
+    return BFSResult(dist=dist, cnt=cnt, keep=keep, levels=rounds)
+
+
+def plain_spc_bfs(g: Graph, root, max_levels: int | None = None) -> BFSResult:
+    """Unpruned counting BFS (the online baseline; also the test oracle)."""
+    no_prune = jnp.full(g.n + 1, INF, dtype=jnp.int32)
+    return pruned_spc_bfs(g, root, 0, 1, dbar=no_prune, max_levels=max_levels)
+
+
+def conditional_spc_bfs(
+    g: Graph,
+    root,
+    stop_mask_fn,
+    max_levels: int | None = None,
+) -> BFSResult:
+    """BFS whose expansion stops at vertices failing ``stop_mask_fn``.
+
+    ``stop_mask_fn(dist, cnt, newly) -> bool[n + 1]`` returns the vertices
+    that may continue expanding (evaluated on newly discovered vertices
+    with their final dist/cnt for the level).  Used by SRRSearch where the
+    continue test is ``dist[v] + 1 == sd(v, b)``.
+    """
+    n1 = g.n + 1
+    ids = jnp.arange(n1, dtype=jnp.int32)
+    eligible = ids < g.n
+    dist = jnp.full(n1, INF, dtype=jnp.int32).at[root].set(0)
+    cnt = jnp.zeros(n1, dtype=jnp.int64).at[root].set(1)
+    newly0 = jnp.zeros(n1, dtype=bool).at[root].set(True)
+    frontier = newly0 & stop_mask_fn(dist, cnt, newly0)
+    if max_levels is None:
+        max_levels = g.n
+
+    def cond(state):
+        _, _, frontier, rounds = state
+        return jnp.any(frontier) & (rounds < max_levels)
+
+    def body(state):
+        dist, cnt, frontier, rounds = state
+        sums = relax(g, cnt, frontier)
+        newly = (sums > 0) & (dist == INF) & eligible
+        dist = jnp.where(newly, rounds + 1, dist)
+        cnt = jnp.where(newly, sums, cnt)
+        frontier = newly & stop_mask_fn(dist, cnt, newly)
+        return dist, cnt, frontier, rounds + 1
+
+    dist, cnt, frontier, rounds = jax.lax.while_loop(
+        cond, body, (dist, cnt, frontier, jnp.int32(0)))
+    return BFSResult(dist=dist, cnt=cnt, keep=dist < INF, levels=rounds)

@@ -1,0 +1,107 @@
+"""DecSPC: decremental SPC-Index maintenance for edge deletion
+(Algorithms 4, 5 and 6), fully jitted.
+
+Phase 1 (SRRSearch) runs two conditional BFSs from the deletion endpoints
+*before* the edge is removed; the affected sets SR/R are boolean vertex
+masks.  Phase 2 walks the affected hubs in rank order; per hub one
+PreQuery table + one pruned BFS + one bulk upsert + (for common hubs of a
+and b) one bulk removal.
+
+The isolated-vertex optimization (Section 3.2.3) lives in the host-side
+driver (``repro.core.dynamic``) since it short-circuits the whole
+procedure; the traced path below is correct for that case too, just
+slower.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import graph as G
+from repro.core.bfs import conditional_spc_bfs, pruned_spc_bfs
+from repro.core.graph import INF, Graph
+from repro.core.labels import SPCIndex, bulk_remove, bulk_upsert
+from repro.core.query import one_to_all
+
+
+class SRRSets(NamedTuple):
+    sr_a: jax.Array  # bool[n + 1]
+    sr_b: jax.Array
+    r_a: jax.Array
+    r_b: jax.Array
+    l_ab: jax.Array  # bool[n + 1]: common hubs of a and b
+
+
+def _side(g: Graph, idx: SPCIndex, root, d_other, c_other, l_ab):
+    """One direction of Algorithm 5 (run with the edge still present)."""
+    stop = lambda dist, cnt, newly: dist + 1 == d_other
+    res = conditional_spc_bfs(g, root, stop)
+    visited = res.dist < INF
+    unpruned = visited & (res.dist + 1 == d_other)
+    sr = unpruned & (l_ab | (res.cnt == c_other))
+    r = unpruned & ~sr
+    return sr, r
+
+
+def srr_search(g: Graph, idx: SPCIndex, a, b) -> SRRSets:
+    """Algorithm 5 for both sides."""
+    n = idx.n
+    hubs_a = idx.hub[a]
+    hubs_b = idx.hub[b]
+    in_a = jnp.zeros(n + 1, dtype=bool).at[hubs_a].set(hubs_a < n).at[n].set(False)
+    in_b = jnp.zeros(n + 1, dtype=bool).at[hubs_b].set(hubs_b < n).at[n].set(False)
+    l_ab = in_a & in_b
+    d_b, c_b = one_to_all(idx, b)  # SpcQuery(v, b) for every v
+    d_a, c_a = one_to_all(idx, a)
+    sr_a, r_a = _side(g, idx, a, d_b, c_b, l_ab)
+    sr_b, r_b = _side(g, idx, b, d_a, c_a, l_ab)
+    return SRRSets(sr_a=sr_a, sr_b=sr_b, r_a=r_a, r_b=r_b, l_ab=l_ab)
+
+
+def _dec_update(g: Graph, idx: SPCIndex, h, affected, h_ab) -> SPCIndex:
+    """Algorithm 6, bulk form (post-deletion graph)."""
+    dpre, _ = one_to_all(idx, h, limit=h)  # PreQuery(h, v) for every v
+    res = pruned_spc_bfs(g, h, 0, 1, dbar=dpre, rank_floor=h)
+    upd = res.keep & affected  # U[.]
+    idx = bulk_upsert(idx, h, res.dist, res.cnt, upd)
+    remove_mask = affected & ~upd
+    return jax.lax.cond(
+        h_ab,
+        lambda i: bulk_remove(i, h, remove_mask),
+        lambda i: i, idx)
+
+
+@jax.jit
+def dec_spc(g: Graph, idx: SPCIndex, a, b) -> tuple[Graph, SPCIndex]:
+    """Algorithm 4: delete edge (a, b) and repair the index."""
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    n = idx.n
+    sets = srr_search(g, idx, a, b)
+    g2 = G.delete_edge(g, a, b)
+
+    ids = jnp.arange(n + 1, dtype=jnp.int32)
+    sr_all = (sets.sr_a | sets.sr_b) & (ids < n)
+    sr_ids = jnp.sort(jnp.where(sr_all, ids, n))  # ascending id = rank order
+    aff_b = sets.sr_b | sets.r_b
+    aff_a = sets.sr_a | sets.r_a
+
+    k_max = sr_ids.shape[0]
+
+    def cond(state):
+        k, _ = state
+        return (k < k_max) & (sr_ids[jnp.minimum(k, k_max - 1)] < n)
+
+    def body(state):
+        k, idx = state
+        h = sr_ids[k]
+        is_a_side = sets.sr_a[h]
+        affected = jnp.where(is_a_side, aff_b, aff_a)
+        idx = _dec_update(g2, idx, h, affected, sets.l_ab[h])
+        return k + 1, idx
+
+    _, idx = jax.lax.while_loop(cond, body, (jnp.int32(0), idx))
+    return g2, idx

@@ -1,0 +1,155 @@
+"""Distributed DSPC: shard_map variants of the hot paths.
+
+The paper's Limitations section sketches the only admissible parallelism:
+within one affected hub's BFS, vertices at the same distance level can be
+processed simultaneously.  Our level-synchronous formulation makes that
+parallelism *spatial*: one BFS level is a segment-sum over the edge list,
+so we
+
+* shard the **edge list** over a mesh axis -- each device relaxes its
+  edge shard into a full [n + 1] contribution vector, combined with a
+  single ``psum`` per level (this is the classic 1D vertex-replicated /
+  edge-partitioned graph decomposition);
+* shard **query batches** over the data axis -- the index is a read-only
+  replica per device group (serving-style), so queries are embarrassingly
+  parallel;
+* keep the **label matrices replicated** inside an update group: bulk
+  label updates are O(n L) dense passes that every device executes
+  identically (cheaper than communicating masked scatters at our scales;
+  revisited in EXPERIMENTS.md SPerf).
+
+On the production mesh (see ``repro.launch.mesh``) the edge axis maps to
+``"model"`` and the query-batch axis to ``"data"`` x ``"pod"``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import graph as G
+from repro.core.bfs import BFSResult
+from repro.core.graph import INF, Graph
+from repro.core.labels import SPCIndex, bulk_append, empty_index
+from repro.core.query import one_to_all, pair_query_merge
+
+
+def pad_graph_for(g: Graph, num_shards: int) -> Graph:
+    """Pad the edge arrays so cap_e divides evenly over the shard axis."""
+    rem = (-g.cap_e) % num_shards
+    if rem == 0:
+        return g
+    src = jnp.pad(g.src, (0, rem), constant_values=g.n)
+    dst = jnp.pad(g.dst, (0, rem), constant_values=g.n)
+    return Graph(src=src, dst=dst, m2=g.m2, n=g.n)
+
+
+def make_sharded_relax(mesh: Mesh, edge_axis: str):
+    """Edge-sharded relaxation: local segment-sum + one psum per level."""
+
+    def local_relax(src_blk, dst_blk, cnt, frontier):
+        contrib = jnp.where(frontier[src_blk], cnt[src_blk], jnp.int64(0))
+        part = jax.ops.segment_sum(contrib, dst_blk, num_segments=cnt.shape[0])
+        return jax.lax.psum(part, edge_axis)
+
+    return jax.shard_map(
+        local_relax,
+        mesh=mesh,
+        in_specs=(P(edge_axis), P(edge_axis), P(), P()),
+        out_specs=P(),
+    )
+
+
+def sharded_pruned_bfs(
+    g: Graph,
+    root,
+    root_dist,
+    root_cnt,
+    dbar: jax.Array,
+    relax_fn,
+    rank_floor=None,
+    max_levels: int | None = None,
+) -> BFSResult:
+    """``bfs.pruned_spc_bfs`` with a pluggable (sharded) relaxation."""
+    n1 = g.n + 1
+    ids = jnp.arange(n1, dtype=jnp.int32)
+    eligible = ids < g.n
+    if rank_floor is not None:
+        eligible &= ids >= jnp.asarray(rank_floor, jnp.int32)
+    dist = jnp.full(n1, INF, dtype=jnp.int32).at[root].set(
+        jnp.asarray(root_dist, jnp.int32))
+    cnt = jnp.zeros(n1, dtype=jnp.int64).at[root].set(
+        jnp.asarray(root_cnt, jnp.int64))
+    root_keep = dbar[root] >= jnp.asarray(root_dist, jnp.int32)
+    frontier = jnp.zeros(n1, dtype=bool).at[root].set(root_keep)
+    keep = frontier
+    level = jnp.asarray(root_dist, jnp.int32)
+    if max_levels is None:
+        max_levels = g.n
+
+    def cond(state):
+        _, _, frontier, _, _, rounds = state
+        return jnp.any(frontier) & (rounds < max_levels)
+
+    def body(state):
+        dist, cnt, frontier, keep, level, rounds = state
+        sums = relax_fn(g.src, g.dst, cnt, frontier)
+        newly = (sums > 0) & (dist == INF) & eligible
+        dist = jnp.where(newly, level + 1, dist)
+        cnt = jnp.where(newly, sums, cnt)
+        pruned = newly & (dbar < dist)
+        frontier = newly & ~pruned
+        keep = keep | frontier
+        return dist, cnt, frontier, keep, level + 1, rounds + 1
+
+    dist, cnt, frontier, keep, level, rounds = jax.lax.while_loop(
+        cond, body, (dist, cnt, frontier, keep, level, jnp.int32(0)))
+    return BFSResult(dist=dist, cnt=cnt, keep=keep, levels=rounds)
+
+
+def make_distributed_builder(mesh: Mesh, edge_axis: str = "model"):
+    """HP-SPC construction with edge-sharded BFS levels.
+
+    Returns ``build(g, l_cap) -> SPCIndex``; ``g`` must be padded via
+    :func:`pad_graph_for` with the size of ``edge_axis``.
+    """
+    relax_fn = make_sharded_relax(mesh, edge_axis)
+
+    @partial(jax.jit, static_argnames=("l_cap",))
+    def build(g: Graph, l_cap: int) -> SPCIndex:
+        idx0 = empty_index(g.n, l_cap)
+
+        def hub_round(v, idx):
+            dbar, _ = one_to_all(idx, v, limit=v)
+            res = sharded_pruned_bfs(g, v, 0, 1, dbar, relax_fn, rank_floor=v)
+            return bulk_append(idx, v, res.dist, res.cnt, res.keep)
+
+        return jax.lax.fori_loop(0, g.n, hub_round, idx0)
+
+    return build
+
+
+def make_sharded_query(mesh: Mesh, batch_axes: Tuple[str, ...] = ("data",)):
+    """Batched SPC queries sharded over the query batch.
+
+    The index is replicated (read-only serving replica); each device
+    answers its slice of the (s, t) pair batch.
+    """
+    spec = P(batch_axes)
+
+    def local_query(idx, s_blk, t_blk):
+        return jax.vmap(pair_query_merge,
+                        in_axes=(None, 0, 0))(idx, s_blk, t_blk)
+
+    fn = jax.shard_map(
+        local_query,
+        mesh=mesh,
+        in_specs=(P(), spec, spec),
+        out_specs=(spec, spec),
+    )
+    return jax.jit(fn)

@@ -1,0 +1,199 @@
+"""DynamicSPC: the host-side driver that makes DSPC a *service*.
+
+Responsibilities beyond the jitted algorithm steps:
+
+* capacity management -- grows the edge arrays and the label matrices
+  (overflow-retry: every jitted update reports lost writes through the
+  index's ``overflow`` counter; the driver re-pads the *pre-op* snapshot
+  and replays the op, which is sound because all ops are functional);
+* the isolated-vertex fast path of Section 3.2.3;
+* vertex insertion/deletion (reduction to edge events, Section 3);
+* update batching (streams of mixed events, the Section 4.4 scenario);
+* checkpointable state (arrays only -- see ``repro.train.checkpoint``).
+
+This mirrors what the C++ artifact's main loop does, lifted into a
+recoverable, shardable form.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph as G
+from repro.core import labels as L
+from repro.core.construct import build_index
+from repro.core.decremental import dec_spc
+from repro.core.graph import INF, Graph
+from repro.core.incremental import inc_spc
+from repro.core.labels import SPCIndex
+from repro.core.query import batched_query
+
+
+@dataclasses.dataclass
+class UpdateStats:
+    inserts: int = 0
+    deletions: int = 0
+    isolated_fast_path: int = 0
+    label_regrows: int = 0
+    edge_regrows: int = 0
+
+
+class DynamicSPC:
+    """Maintains (graph, SPC-Index) under a stream of topology events."""
+
+    def __init__(self, n: int, edges: Sequence[Tuple[int, int]] = (),
+                 l_cap: int = 32, cap_e: int | None = None) -> None:
+        self.stats = UpdateStats()
+        self.graph = G.from_edges(n, edges, cap_e)
+        self.index = self._build(l_cap)
+
+    # -- construction with overflow-retry ---------------------------------
+    def _build(self, l_cap: int) -> SPCIndex:
+        while True:
+            idx = build_index(self.graph, l_cap)
+            if int(idx.overflow) == 0:
+                return idx
+            l_cap *= 2
+            self.stats.label_regrows += 1
+
+    def rebuild(self) -> None:
+        """Reconstruction baseline (what the paper's HP-SPC rerun does)."""
+        self.index = self._build(self.index.l_cap)
+
+    @property
+    def n(self) -> int:
+        return self.graph.n
+
+    # -- queries -----------------------------------------------------------
+    def query(self, s: int, t: int) -> Tuple[int, int]:
+        d, c = batched_query(self.index, jnp.asarray([s]), jnp.asarray([t]))
+        d = int(d[0])
+        return (d if d < int(INF) else int(INF), int(c[0]))
+
+    def query_batch(self, s, t):
+        from repro.core.query import batched_query_jit
+        return batched_query_jit(self.index, jnp.asarray(s), jnp.asarray(t))
+
+    # -- updates -----------------------------------------------------------
+    def insert_edge(self, a: int, b: int) -> None:
+        if bool(G.has_edge(self.graph, a, b)):
+            raise ValueError(f"edge ({a},{b}) already present")
+        self.graph = G.ensure_capacity(self.graph, 2)
+        while True:
+            g2, idx2 = inc_spc(self.graph, self.index, a, b)
+            if int(idx2.overflow) == 0:
+                self.graph, self.index = g2, idx2
+                break
+            self.index = L.repad(self.index, self.index.l_cap * 2)
+            self.stats.label_regrows += 1
+        self.stats.inserts += 1
+
+    def delete_edge(self, a: int, b: int) -> None:
+        if not bool(G.has_edge(self.graph, a, b)):
+            raise ValueError(f"edge ({a},{b}) not present")
+        lo, hi = (a, b) if a < b else (b, a)
+        deg = G.degrees(self.graph)
+        if int(deg[hi]) == 1:
+            # Section 3.2.3: the lower-ranked endpoint becomes isolated and
+            # is never a hub elsewhere -- reset its row to the self label.
+            self.graph = G.delete_edge(self.graph, a, b)
+            idx = self.index
+            n = idx.n
+            row_hub = jnp.full(idx.l_cap, n, jnp.int32).at[0].set(hi)
+            row_dist = jnp.full(idx.l_cap, INF, jnp.int32).at[0].set(0)
+            row_cnt = jnp.zeros(idx.l_cap, jnp.int64).at[0].set(1)
+            self.index = dataclasses.replace(
+                idx,
+                hub=idx.hub.at[hi].set(row_hub),
+                dist=idx.dist.at[hi].set(row_dist),
+                cnt=idx.cnt.at[hi].set(row_cnt),
+                size=idx.size.at[hi].set(1),
+            )
+            self.stats.isolated_fast_path += 1
+        else:
+            while True:
+                g2, idx2 = dec_spc(self.graph, self.index, a, b)
+                if int(idx2.overflow) == 0:
+                    self.graph, self.index = g2, idx2
+                    break
+                self.index = L.repad(self.index, self.index.l_cap * 2)
+                self.stats.label_regrows += 1
+        self.stats.deletions += 1
+
+    def insert_edges(self, edges) -> None:
+        """Batched insertion: one jitted call for the whole batch
+        (beyond-paper; see ``incremental.inc_spc_batch``)."""
+        from repro.core.incremental import inc_spc_batch
+        edges = [(a, b) for a, b in edges]
+        for a, b in edges:
+            if bool(G.has_edge(self.graph, a, b)):
+                raise ValueError(f"edge ({a},{b}) already present")
+        self.graph = G.ensure_capacity(self.graph, 2 * len(edges))
+        arr = jnp.asarray(np.asarray(edges, dtype=np.int32))
+        while True:
+            g2, idx2 = inc_spc_batch(self.graph, self.index, arr)
+            if int(idx2.overflow) == 0:
+                self.graph, self.index = g2, idx2
+                break
+            self.index = L.repad(self.index, self.index.l_cap * 2)
+            self.stats.label_regrows += 1
+        self.stats.inserts += len(edges)
+
+    def insert_vertex(self) -> int:
+        """Append an isolated vertex (lowest rank). Recompiles (n changes)."""
+        self.graph = G.add_vertices(self.graph, 1)
+        self.index = L.add_vertices(self.index, 1)
+        return self.n - 1
+
+    def delete_vertex(self, v: int) -> None:
+        src = np.asarray(self.graph.src)
+        dst = np.asarray(self.graph.dst)
+        nbrs = sorted(set(int(w) for s, w in zip(src, dst) if s == v and w != self.n))
+        for u in nbrs:
+            self.delete_edge(v, u)
+
+    def apply_events(self, events: Iterable[Tuple[str, int, int]]) -> None:
+        """Apply a stream of ('+'|'-', a, b) events (Section 4.4)."""
+        for op, a, b in events:
+            if op == "+":
+                self.insert_edge(a, b)
+            elif op == "-":
+                self.delete_edge(a, b)
+            else:
+                raise ValueError(f"unknown event {op!r}")
+
+    # -- introspection -------------------------------------------------------
+    def index_entries(self) -> int:
+        return int(self.index.total_entries())
+
+    def index_bytes(self) -> int:
+        """Paper's packed accounting: 8 bytes per label entry."""
+        return 8 * self.index_entries()
+
+    def state_dict(self) -> dict:
+        return {
+            "graph.src": self.graph.src, "graph.dst": self.graph.dst,
+            "graph.m2": self.graph.m2,
+            "index.hub": self.index.hub, "index.dist": self.index.dist,
+            "index.cnt": self.index.cnt, "index.size": self.index.size,
+        }
+
+    @classmethod
+    def from_state_dict(cls, n: int, state: dict) -> "DynamicSPC":
+        obj = cls.__new__(cls)
+        obj.graph = Graph(src=jnp.asarray(state["graph.src"]),
+                          dst=jnp.asarray(state["graph.dst"]),
+                          m2=jnp.asarray(state["graph.m2"]), n=n)
+        obj.index = SPCIndex(
+            hub=jnp.asarray(state["index.hub"]),
+            dist=jnp.asarray(state["index.dist"]),
+            cnt=jnp.asarray(state["index.cnt"]),
+            size=jnp.asarray(state["index.size"]),
+            overflow=jnp.int32(0), n=n)
+        obj.stats = UpdateStats()
+        return obj

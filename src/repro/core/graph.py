@@ -1,0 +1,185 @@
+"""Fixed-capacity, jit-friendly dynamic graph representation.
+
+TPU adaptation (see DESIGN.md): the paper's C++ implementation walks
+adjacency lists with a FIFO queue -- a pointer-chasing pattern with no TPU
+analogue.  We instead store the graph as a *directed-doubled edge list*
+(each undirected edge occupies two directed slots) and run BFS
+level-synchronously: one level = one dense edge-relaxation (a segment-sum
+over the whole edge list).  This is exactly the parallelization the paper
+sketches in its Limitations section ("vertices at the same distance level
+can be tested and updated simultaneously"), lifted to a form XLA/TPU can
+execute: everything is fixed-shape, data-independent control flow.
+
+Conventions
+-----------
+* Vertices are relabeled by rank: id 0 is the *highest* ranked vertex, so
+  the paper's ``u <= v`` rank test is an integer comparison on ids.
+* All per-vertex arrays have ``n + 1`` rows; row ``n`` is a "dump" row that
+  absorbs contributions from padding / tombstoned edges.
+* Edge slots beyond the active count and tombstoned (deleted) slots store
+  ``(n, n)`` so they relax into the dump row.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF = jnp.int32(1 << 28)  # safe: INF + INF < int32 max
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Undirected graph as a capacity-padded directed edge list."""
+
+    src: jax.Array  # int32[cap_e], tombstone/pad = n
+    dst: jax.Array  # int32[cap_e]
+    m2: jax.Array   # int32 scalar: high-water mark of used directed slots
+    n: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def cap_e(self) -> int:
+        return self.src.shape[0]
+
+    @property
+    def num_active_directed(self) -> jax.Array:
+        return jnp.sum((self.src != self.n).astype(jnp.int32))
+
+
+def from_edges(n: int, edges: Sequence[Tuple[int, int]], cap_e: int | None = None) -> Graph:
+    """Build a Graph from an undirected edge list (host-side)."""
+    pairs = []
+    seen = set()
+    for a, b in edges:
+        if a == b:
+            raise ValueError("self loops are not allowed")
+        key = (min(a, b), max(a, b))
+        if key in seen:
+            raise ValueError(f"duplicate edge {key}")
+        seen.add(key)
+        pairs.append((a, b))
+        pairs.append((b, a))
+    m2 = len(pairs)
+    if cap_e is None:
+        cap_e = max(16, _next_pow2(m2 + (m2 // 2)))
+    if m2 > cap_e:
+        raise ValueError(f"cap_e={cap_e} < 2*m={m2}")
+    src = np.full(cap_e, n, dtype=np.int32)
+    dst = np.full(cap_e, n, dtype=np.int32)
+    for i, (a, b) in enumerate(pairs):
+        src[i], dst[i] = a, b
+    return Graph(src=jnp.asarray(src), dst=jnp.asarray(dst),
+                 m2=jnp.int32(m2), n=n)
+
+
+def _next_pow2(x: int) -> int:
+    p = 16
+    while p < x:
+        p *= 2
+    return p
+
+
+# --------------------------------------------------------------------------
+# Dynamic updates (functional; jit-friendly).
+# --------------------------------------------------------------------------
+def insert_edge(g: Graph, a, b) -> Graph:
+    """Insert undirected edge (a, b) into two free slots at the high-water
+    mark.  Caller must ensure capacity (see :func:`ensure_capacity`)."""
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    src = g.src.at[g.m2].set(a).at[g.m2 + 1].set(b)
+    dst = g.dst.at[g.m2].set(b).at[g.m2 + 1].set(a)
+    return Graph(src=src, dst=dst, m2=g.m2 + 2, n=g.n)
+
+
+def delete_edge(g: Graph, a, b) -> Graph:
+    """Tombstone both directed slots of (a, b).
+
+    Tombstoned slots relax into the dump row (cost only, no effect); the
+    host-side :func:`compact` reclaims them when their fraction grows.
+    """
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    hit_ab = (g.src == a) & (g.dst == b)
+    hit_ba = (g.src == b) & (g.dst == a)
+    i = jnp.argmax(hit_ab)
+    j = jnp.argmax(hit_ba)
+    n32 = jnp.int32(g.n)
+    src = g.src.at[i].set(n32).at[j].set(n32)
+    dst = g.dst.at[i].set(n32).at[j].set(n32)
+    return Graph(src=src, dst=dst, m2=g.m2, n=g.n)
+
+
+def has_edge(g: Graph, a, b) -> jax.Array:
+    return jnp.any((g.src == jnp.asarray(a, jnp.int32)) & (g.dst == jnp.asarray(b, jnp.int32)))
+
+
+def degrees(g: Graph) -> jax.Array:
+    """int32[n + 1] out-degree per vertex (row n counts tombstones)."""
+    ones = jnp.ones_like(g.src)
+    return jax.ops.segment_sum(ones, g.src, num_segments=g.n + 1)
+
+
+def ensure_capacity(g: Graph, extra_directed: int = 2) -> Graph:
+    """Host-side: grow the edge arrays if fewer than ``extra_directed``
+    slots remain at the high-water mark (compacting first if profitable)."""
+    m2 = int(g.m2)
+    if m2 + extra_directed <= g.cap_e:
+        return g
+    g = compact(g)
+    m2 = int(g.m2)
+    if m2 + extra_directed <= g.cap_e:
+        return g
+    new_cap = _next_pow2(m2 + extra_directed)
+    src = np.full(new_cap, g.n, dtype=np.int32)
+    dst = np.full(new_cap, g.n, dtype=np.int32)
+    src[:m2] = np.asarray(g.src[:m2])
+    dst[:m2] = np.asarray(g.dst[:m2])
+    return Graph(src=jnp.asarray(src), dst=jnp.asarray(dst),
+                 m2=jnp.int32(m2), n=g.n)
+
+
+def compact(g: Graph) -> Graph:
+    """Host-side: squeeze out tombstones."""
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    live = src != g.n
+    m2 = int(live.sum())
+    new_src = np.full(g.cap_e, g.n, dtype=np.int32)
+    new_dst = np.full(g.cap_e, g.n, dtype=np.int32)
+    new_src[:m2] = src[live]
+    new_dst[:m2] = dst[live]
+    return Graph(src=jnp.asarray(new_src), dst=jnp.asarray(new_dst),
+                 m2=jnp.int32(m2), n=g.n)
+
+
+def add_vertices(g: Graph, count: int) -> Graph:
+    """Host-side: append ``count`` isolated vertices (relabels the dump row).
+
+    Tombstones/padding previously pointed at row ``n``; they must point at
+    the new dump row ``n + count``.
+    """
+    new_n = g.n + count
+    src = np.asarray(g.src).copy()
+    dst = np.asarray(g.dst).copy()
+    src[src == g.n] = new_n
+    dst[dst == g.n] = new_n
+    return Graph(src=jnp.asarray(src), dst=jnp.asarray(dst), m2=g.m2, n=new_n)
+
+
+def to_ref(g: Graph):
+    """Convert to the paper-faithful reference graph (for tests)."""
+    from repro.core.refimpl import RefGraph
+
+    ref = RefGraph(g.n)
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    for a, b in zip(src, dst):
+        if a != g.n and a < b:
+            ref.add_edge(int(a), int(b))
+    return ref

@@ -1,0 +1,138 @@
+"""SPC-Index query evaluation (Algorithm 1 and the PreQuery variant).
+
+Two evaluation strategies, both O(1)-control-flow for XLA:
+
+* ``pair_query`` -- label-row intersection by an L x L comparison table.
+  Used for ad-hoc / batched (s, t) queries; this is also what the Pallas
+  kernel ``repro.kernels.spc_query`` accelerates on TPU (the comparison
+  table maps onto the VPU; blocks of pairs stream through VMEM).
+
+* ``one_to_all`` -- the dense-source trick: scatter L(h) into a dense
+  [n+1] (dist, cnt) table, then every row v evaluates its own labels
+  against the table in O(L).  Used inside construction/updates where one
+  hub is queried against all vertices (turns the per-level O(n L^2) of a
+  naive transcription into O(n L) per hub, computed once per BFS).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import INF
+from repro.core.labels import SPCIndex
+
+_BIG = INF * 2  # > any real distance sum; int32-safe
+
+
+def _intersect(hub_s, dist_s, cnt_s, hub_t, dist_t, cnt_t, limit):
+    """Shared pair-intersection core; ``limit`` masks hubs >= limit
+    (PreQuery); pass limit = n+1 for the full query."""
+    eq = (hub_s[:, None] == hub_t[None, :]) & (hub_s[:, None] < limit)
+    dsum = dist_s[:, None] + dist_t[None, :]
+    dsum = jnp.where(eq, dsum, _BIG)
+    d = jnp.min(dsum)
+    prod = cnt_s[:, None] * cnt_t[None, :]
+    c = jnp.sum(jnp.where(dsum == d, prod, 0), dtype=jnp.int64)
+    disconnected = d >= INF
+    return (jnp.where(disconnected, INF, d).astype(jnp.int32),
+            jnp.where(disconnected, 0, c))
+
+
+def pair_query(idx: SPCIndex, s, t):
+    """Algorithm 1: (dist, count) between s and t. Returns (INF, 0) if
+    disconnected."""
+    return _intersect(
+        idx.hub[s], idx.dist[s], idx.cnt[s],
+        idx.hub[t], idx.dist[t], idx.cnt[t],
+        jnp.int32(idx.n + 1))
+
+
+def _intersect_merge(hub_s, dist_s, cnt_s, hub_t, dist_t, cnt_t):
+    """Sorted-merge intersection via searchsorted: O(L log L) ops and
+    O(L) intermediates (vs the L x L table's O(L^2)).  Rows are sorted
+    by hub id with pad = n (sorts last), so a binary probe of L(t) per
+    label of L(s) finds every common hub.  SPerf cell-C it-1: cuts the
+    dominant memory term ~20x on the query_batch cell."""
+    l_cap = hub_t.shape[0]
+    pos = jnp.searchsorted(hub_t, hub_s)
+    pos_c = jnp.minimum(pos, l_cap - 1).astype(jnp.int32)
+    match = hub_t[pos_c] == hub_s
+    dsum = jnp.where(match, dist_s + dist_t[pos_c], _BIG)
+    d = jnp.min(dsum)
+    c = jnp.sum(jnp.where(dsum == d, cnt_s * cnt_t[pos_c], 0),
+                dtype=jnp.int64)
+    disconnected = d >= INF
+    return (jnp.where(disconnected, INF, d).astype(jnp.int32),
+            jnp.where(disconnected, 0, c))
+
+
+def pair_query_merge(idx: SPCIndex, s, t):
+    """Algorithm 1 by sorted merge (memory-optimal serving path)."""
+    return _intersect_merge(
+        idx.hub[s], idx.dist[s], idx.cnt[s],
+        idx.hub[t], idx.dist[t], idx.cnt[t])
+
+
+batched_query_merge = jax.vmap(pair_query_merge, in_axes=(None, 0, 0))
+
+
+def pre_pair_query(idx: SPCIndex, s, t):
+    """PreQuery(s, t): only hubs ranked strictly higher than s."""
+    return _intersect(
+        idx.hub[s], idx.dist[s], idx.cnt[s],
+        idx.hub[t], idx.dist[t], idx.cnt[t],
+        jnp.asarray(s, jnp.int32))
+
+
+batched_query = jax.vmap(pair_query, in_axes=(None, 0, 0))
+
+
+@partial(jax.jit, static_argnames=())
+def batched_query_jit(idx: SPCIndex, s: jax.Array, t: jax.Array):
+    return batched_query_merge(idx, s, t)
+
+
+# --------------------------------------------------------------------------
+# Dense one-vs-all queries.
+# --------------------------------------------------------------------------
+def dense_tables(idx: SPCIndex, h, limit=None):
+    """Scatter L(h) into dense (dist, cnt) tables of shape [n + 1].
+
+    ``limit`` (optional) drops entries of L(h) whose hub id >= limit
+    (PreQuery restriction on the source side).
+    """
+    row_hub = idx.hub[h]
+    row_dist = idx.dist[h]
+    row_cnt = idx.cnt[h]
+    if limit is not None:
+        keep = row_hub < limit
+        row_hub = jnp.where(keep, row_hub, jnp.int32(idx.n))  # scatter to dump
+    dense_d = jnp.full(idx.n + 1, INF, dtype=jnp.int32).at[row_hub].set(row_dist)
+    dense_c = jnp.zeros(idx.n + 1, dtype=jnp.int64).at[row_hub].set(row_cnt)
+    # The dump slot may have been overwritten by masked/pad entries:
+    dense_d = dense_d.at[idx.n].set(INF)
+    dense_c = dense_c.at[idx.n].set(0)
+    return dense_d, dense_c
+
+
+def one_to_all(idx: SPCIndex, h, limit=None):
+    """(dist[n+1], cnt[n+1]) = SpcQuery(h, v) for every v.
+
+    With ``limit=h`` this evaluates PreQuery(h, v) for every v.
+    """
+    dense_d, dense_c = dense_tables(idx, h, limit)
+    hubs = idx.hub            # [n+1, L]
+    cand = dense_d[hubs] + idx.dist          # int32 [n+1, L]
+    if limit is not None:
+        cand = jnp.where(hubs < limit, cand, _BIG)
+    cand = jnp.where(hubs < idx.n, cand, _BIG)   # drop pads
+    d = jnp.min(cand, axis=1)
+    prod = idx.cnt * dense_c[hubs]
+    c = jnp.sum(jnp.where(cand == d[:, None], prod, 0), axis=1,
+                dtype=jnp.int64)
+    disconnected = d >= INF
+    return (jnp.where(disconnected, INF, d).astype(jnp.int32),
+            jnp.where(disconnected, 0, c))

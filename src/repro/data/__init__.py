@@ -1,0 +1,9 @@
+"""Synthetic, deterministic data pipelines (offline container: no
+downloads).  Every generator is a pure function of (seed, step) so the
+fault-tolerant loop replays identical batches after restart.
+"""
+
+from repro.data.pipelines import (
+    lm_batch, dien_batch, graph_stream, random_graph_edges,
+    molecule_batch,
+)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel directory contains ``kernel.py`` (pl.pallas_call + BlockSpec
+VMEM tiling), ``ops.py`` (jit'd public wrapper) and ``ref.py`` (pure-jnp
+oracle used by the allclose test sweeps).
+
+* ``spc_query``      -- batched SPC-Index pair queries (the paper's
+                        Algorithm 1; serving hot path).
+* ``segment_matmul`` -- scatter-add as blocked one-hot MXU matmul (DSPC
+                        edge relaxation + GNN message passing).
+* ``flash_decode``   -- single-token attention over long KV caches
+                        (decode_32k / long_500k shapes).
+* ``embedding_bag``  -- scalar-prefetch EmbeddingBag (recsys tables).
+"""

@@ -1,0 +1,25 @@
+"""Shared helpers for the Pallas TPU kernels."""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+# Kernels run in interpret mode on CPU (this container) and compiled mode
+# on TPU.  REPRO_PALLAS_INTERPRET=0 switches to compiled lowering.
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(x, multiple: int, axis: int, value=0):
+    """Pad ``axis`` of x up to the next multiple."""
+    rem = (-x.shape[axis]) % multiple
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)

@@ -1,0 +1,4 @@
+"""embedding_bag kernel package."""
+from repro.kernels.embedding_bag.kernel import *  # noqa
+from repro.kernels.embedding_bag.ops import *  # noqa
+from repro.kernels.embedding_bag.ref import *  # noqa

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: EmbeddingBag (gather + in-bag sum) via scalar
+prefetch.
+
+JAX has no native EmbeddingBag; the recsys path needs `take` +
+`segment_sum` over huge tables.  On TPU the table lives in HBM and the
+rows a bag touches are *data-dependent*, so we use the canonical Pallas
+pattern: the id matrix is scalar-prefetched (available at grid-index
+time) and drives the **index_map** of the table operand -- each grid step
+DMAs exactly the one [1, D] row it needs into VMEM while the previous
+step computes (Mosaic double-buffers automatically).  The bag accumulator
+is VMEM scratch carried over the (sequential, minor) in-bag dimension.
+
+Ids >= the table size act as padding (contribute zero) -- the wrapper
+clamps them onto a zero row appended to the table.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import INTERPRET
+
+
+def _kernel(ids_ref, table_ref, o_ref, acc_ref):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += table_ref[...]
+
+    @pl.when(s == pl.num_programs(1) - 1)
+    def _fin():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_pallas(ids, table, *, interpret: bool | None = None):
+    """out[b] = sum over s of table[ids[b, s]].
+
+    Args:
+      ids: int32[B, S]; entries >= table.shape[0] - 1 hit the final row,
+        which the wrapper guarantees to be zero (padding).
+      table: float[V + 1, D] with table[V] == 0.
+    Returns:
+      float[B, D].
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    b, s = ids.shape
+    v1, d = table.shape
+    ids = jnp.minimum(ids.astype(jnp.int32), v1 - 1)
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, s),
+            in_specs=[pl.BlockSpec((1, d), lambda bb, ss, ids: (ids[bb, ss], 0))],
+            out_specs=pl.BlockSpec((1, d), lambda bb, ss, ids: (bb, 0)),
+            scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(ids, table)
+    return out

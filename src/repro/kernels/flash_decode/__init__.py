@@ -1,0 +1,4 @@
+"""flash_decode kernel package."""
+from repro.kernels.flash_decode.kernel import *  # noqa
+from repro.kernels.flash_decode.ops import *  # noqa
+from repro.kernels.flash_decode.ref import *  # noqa

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: flash decode (single-token attention vs KV cache).
+
+The serving hot path for ``decode_32k`` / ``long_500k`` shapes: one query
+token attends over a long cache.  The cache streams through VMEM in
+blocks along the sequence axis with the online-softmax recurrence
+
+    m' = max(m, max(s_blk));  l' = l e^{m-m'} + sum e^{s_blk - m'}
+    acc' = acc e^{m-m'} + e^{s_blk - m'} @ v_blk
+
+carried in VMEM scratch across the (sequential, minor) sequence grid
+dimension.  Per-step VMEM: block_s * d * 2 (K and V tiles) + d accum --
+block_s=512, d=128 fp32 is ~512 KiB.  This is the same schedule our
+sharded decode path uses *across* chips (per-device partials merged with
+a log-sum-exp psum, see ``repro.models.attention``); the kernel is the
+within-chip leaf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import INTERPRET, ceil_div, pad_to
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float, block_s: int):
+    sb = pl.program_id(1)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]                       # [bh, d]
+    k = k_ref[...]                       # [bh, block_s, d]
+    v = v_ref[...]
+    s = jnp.einsum("bd,bsd->bs", q, k) * scale          # [bh, block_s]
+    # mask beyond the valid cache length
+    positions = sb * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(positions < len_ref[...][:, None], s, NEG_INF)
+
+    m_prev = m_ref[...]                  # [bh, 1]
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=1))[:, None]
+    alpha = jnp.exp(m_prev - m_new)      # [bh, 1]
+    p = jnp.exp(s - m_new)               # [bh, block_s]
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.einsum("bs,bsd->bd", p, v)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(sb == pl.num_programs(1) - 1)
+    def _fin():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_bh", "block_s",
+                                             "interpret"))
+def flash_decode_pallas(q, k, v, lengths, *, block_bh: int = 8,
+                        block_s: int = 512, interpret: bool | None = None):
+    """Single-token attention over a KV cache.
+
+    Args:
+      q: float[BH, D] query vectors (batch x heads flattened; GQA expanded
+        by the caller or by sharing the same cache rows).
+      k, v: float[BH, S, D] cache.
+      lengths: int32[BH] valid cache length per row.
+    Returns:
+      float[BH, D] attention outputs.
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    bh, d = q.shape
+    s_len = k.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    bhp = ceil_div(bh, block_bh) * block_bh
+    sp = ceil_div(s_len, block_s) * block_s
+    q = pad_to(q, block_bh, 0)
+    k = pad_to(pad_to(k, block_s, 1), block_bh, 0)
+    v = pad_to(pad_to(v, block_s, 1), block_bh, 0)
+    lengths = pad_to(lengths.astype(jnp.int32), block_bh, 0)
+    grid = (bhp // block_bh, sp // block_s)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_bh, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_bh, block_s, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_bh, block_s, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_bh,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_bh, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_bh, 1), jnp.float32),
+            pltpu.VMEM((block_bh, 1), jnp.float32),
+            pltpu.VMEM((block_bh, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lengths)
+    return out[:bh]

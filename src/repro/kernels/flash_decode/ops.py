@@ -1,0 +1,33 @@
+"""Jit'd wrapper: GQA-aware decode attention entry point."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import flash_decode_pallas
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+
+def decode_attention(q, k, v, lengths, *, use_kernel: bool = False, **kw):
+    """q: [B, H, D]; k, v: [B, S, KVH, D]; lengths: int32[B].
+
+    KV heads are broadcast over query-head groups (GQA).  With
+    ``use_kernel`` the flattened [B*H] rows run through the Pallas flash
+    decode kernel; otherwise a pure-jnp fallback executes (used inside
+    fully-sharded serve steps where XLA fuses the softmax chain).
+    """
+    b, h, d = q.shape
+    s = k.shape[1]
+    kvh = k.shape[2]
+    group = h // kvh
+    kq = jnp.repeat(k, group, axis=2)  # [B, S, H, D]
+    vq = jnp.repeat(v, group, axis=2)
+    qf = q.reshape(b * h, d)
+    kf = kq.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = vq.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    lf = jnp.repeat(lengths, h)
+    if use_kernel:
+        out = flash_decode_pallas(qf, kf, vf, lf, **kw)
+    else:
+        out = flash_decode_ref(qf, kf, vf, lf)
+    return out.reshape(b, h, d)

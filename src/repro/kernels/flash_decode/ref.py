@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for flash_decode."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_decode_ref(q, k, v, lengths):
+    d = q.shape[-1]
+    s = jnp.einsum("bd,bsd->bs", q, k) / (d ** 0.5)
+    mask = jnp.arange(k.shape[1])[None, :] < lengths[:, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=1, keepdims=True))
+    p = p / jnp.sum(p, axis=1, keepdims=True)
+    return jnp.einsum("bs,bsd->bd", p, v).astype(q.dtype)

@@ -1,0 +1,4 @@
+"""segment_matmul kernel package."""
+from repro.kernels.segment_matmul.kernel import *  # noqa
+from repro.kernels.segment_matmul.ops import *  # noqa
+from repro.kernels.segment_matmul.ref import *  # noqa

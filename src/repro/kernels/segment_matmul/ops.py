@@ -1,0 +1,28 @@
+"""Jit'd wrappers: scatter-add / GNN aggregation entry points."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import INTERPRET
+from repro.kernels.segment_matmul.kernel import segment_matmul_pallas
+from repro.kernels.segment_matmul.ref import segment_matmul_ref
+
+
+def scatter_add(vals, dst, num_segments: int, *, use_kernel: bool = False,
+                **kw):
+    """Segment-sum used by GNN message passing.
+
+    ``use_kernel=False`` (default) lowers to XLA's native scatter-add --
+    appropriate under ``jit``-of-everything on CPU and inside sharded
+    full-graph steps.  ``use_kernel=True`` routes through the Pallas
+    one-hot-matmul kernel (TPU hot path).
+    """
+    if use_kernel:
+        return segment_matmul_pallas(vals, dst, num_segments, **kw)
+    return segment_matmul_ref(vals, dst, num_segments)
+
+
+def gather_scatter(node_feats, src, dst, num_segments: int, **kw):
+    """message = gather(node_feats, src); out = scatter_add(message, dst)."""
+    return scatter_add(node_feats[src], dst, num_segments, **kw)

@@ -1,0 +1,4 @@
+"""spc_query kernel package."""
+from repro.kernels.spc_query.kernel import *  # noqa
+from repro.kernels.spc_query.ops import *  # noqa
+from repro.kernels.spc_query.ref import *  # noqa

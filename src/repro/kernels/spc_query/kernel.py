@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: batched SPC-Index pair queries (Algorithm 1).
+
+Serving hot path: given B (s, t) pairs with their label rows resident, the
+kernel evaluates the hub intersection as an L x L comparison table per
+pair -- a dense VPU pattern replacing the paper's sorted merge-join (data-
+dependent control flow does not map to the TPU vector unit; the L^2 table
+at L <= 256 is cheaper than a serialized merge at 1 element/cycle).
+
+Tiling: the pair batch streams through VMEM in blocks of ``block_b``; the
+six label operands of one block occupy 6 * block_b * L * 4 bytes (at the
+default block_b=128, L=128: 384 KiB), leaving the comparison table
+(block_b * L fp32 lanes, materialized L-row-at-a-time by Mosaic) well
+inside the ~16 MiB VMEM budget.
+
+Counts are fp32 *in the kernel only* (TPU VPU has no int64): exact up to
+2^24; the int64 jnp path in ``repro.core.query`` remains the default for
+index maintenance, this kernel serves read-only queries (see DESIGN.md
+"Hardware adaptation").
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import INTERPRET, ceil_div, pad_to
+
+INF = 1 << 28
+_BIG = INF * 2
+
+
+def _kernel(hub_s, dist_s, cnt_s, hub_t, dist_t, cnt_t, d_out, c_out):
+    eq = hub_s[...][:, :, None] == hub_t[...][:, None, :]       # [b, L, L]
+    dsum = dist_s[...][:, :, None] + dist_t[...][:, None, :]
+    dsum = jnp.where(eq, dsum, _BIG)
+    d = jnp.min(dsum, axis=(1, 2))                               # [b]
+    prod = cnt_s[...][:, :, None] * cnt_t[...][:, None, :]
+    hit = dsum == d[:, None, None]
+    c = jnp.sum(jnp.where(hit, prod, 0.0), axis=(1, 2))
+    connected = d < INF
+    d_out[...] = jnp.where(connected, d, INF).astype(jnp.int32)
+    c_out[...] = jnp.where(connected, c, 0.0).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def spc_query_pallas(hub_s, dist_s, cnt_s, hub_t, dist_t, cnt_t,
+                     *, block_b: int = 128, interpret: bool | None = None):
+    """Batched pair query.
+
+    Args:
+      hub_s, hub_t: int32[B, L] label hub ids (pad rows with a sentinel
+        whose dist is INF).
+      dist_s, dist_t: int32[B, L] hub distances (pad INF).
+      cnt_s, cnt_t: float32[B, L] hub counts (pad 0).
+    Returns:
+      (dist int32[B], count float32[B]); disconnected pairs -> (INF, 0).
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    b, l = hub_s.shape
+    bp = ceil_div(b, block_b) * block_b
+    args = [pad_to(x, block_b, 0, value=pad) for x, pad in (
+        (hub_s, 0), (dist_s, INF), (cnt_s, 0.0),
+        (hub_t, 1), (dist_t, INF), (cnt_t, 0.0))]
+    grid = (bp // block_b,)
+    row = pl.BlockSpec((block_b, l), lambda i: (i, 0))
+    out = pl.BlockSpec((block_b,), lambda i: (i,))
+    d, c = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[row] * 6,
+        out_specs=[out, out],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp,), jnp.int32),
+            jax.ShapeDtypeStruct((bp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*args)
+    return d[:b], c[:b]

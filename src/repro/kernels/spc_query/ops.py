@@ -1,0 +1,28 @@
+"""Jit'd public wrapper: query an SPCIndex through the Pallas kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.labels import SPCIndex
+from repro.kernels.spc_query.kernel import spc_query_pallas
+
+
+def index_query_batch(idx: SPCIndex, s, t, *, block_b: int = 128,
+                      interpret: bool | None = None):
+    """Batched (s, t) queries against the label matrices.
+
+    Gathers the label rows then invokes the kernel.  The sentinel hub id
+    on the s side keeps its pad value (n) and the t side is re-padded to
+    n+1 so pad rows never produce spurious equality hits.
+    """
+    hub_s = idx.hub[s]
+    hub_t = idx.hub[t]
+    n = idx.n
+    hub_t = jnp.where(hub_t == n, n + 1, hub_t)  # pad != pad across sides
+    return spc_query_pallas(
+        hub_s.astype(jnp.int32), idx.dist[s].astype(jnp.int32),
+        idx.cnt[s].astype(jnp.float32),
+        hub_t.astype(jnp.int32), idx.dist[t].astype(jnp.int32),
+        idx.cnt[t].astype(jnp.float32),
+        block_b=block_b, interpret=interpret)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the spc_query kernel (same fp32 count contract)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INF = 1 << 28
+_BIG = INF * 2
+
+
+def spc_query_ref(hub_s, dist_s, cnt_s, hub_t, dist_t, cnt_t):
+    eq = hub_s[:, :, None] == hub_t[:, None, :]
+    dsum = dist_s[:, :, None] + dist_t[:, None, :]
+    dsum = jnp.where(eq, dsum, _BIG)
+    d = jnp.min(dsum, axis=(1, 2))
+    prod = cnt_s[:, :, None].astype(jnp.float32) * cnt_t[:, None, :].astype(jnp.float32)
+    c = jnp.sum(jnp.where(dsum == d[:, None, None], prod, 0.0), axis=(1, 2))
+    connected = d < INF
+    return (jnp.where(connected, d, INF).astype(jnp.int32),
+            jnp.where(connected, c, 0.0).astype(jnp.float32))

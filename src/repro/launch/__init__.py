@@ -1,0 +1,6 @@
+"""Launch layer: production meshes, per-cell step bundles, the multi-pod
+dry-run, roofline extraction and the train/serve drivers.
+
+NOTE: ``repro.launch.dryrun`` sets XLA_FLAGS at import; never import it
+from test or library code -- shell out instead (see tests/launch/).
+"""

@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: ``lower().compile()`` every (arch x shape) cell on
+the production meshes and extract the roofline terms.
+
+MUST keep the two lines above as the very first statements -- jax locks
+the device count on first init, before any ``repro`` import.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  python -m repro.launch.dryrun --all                 # every cell
+  python -m repro.launch.dryrun --all --multi-pod     # 2x16x16 mesh
+  python -m repro.launch.dryrun --list
+
+Each cell writes ``results/dryrun/<mesh>/<arch>__<shape>.json`` with
+memory_analysis, cost_analysis, collective stats, and timing; reruns
+skip completed cells unless --force.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hlo as hlo_mod
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh, mesh_chips)
+from repro.launch.steps import all_cells, make_bundle
+from repro.sharding import FSDP_TP, drop_pod, resolve_tree
+
+
+def _fit_shardings(shardings, abstract):
+    """Drop mesh axes from dims they don't divide (e.g. batch=1 decode
+    cells on a 16-way data axis -> replicated batch)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def fit(sh, arr):
+        if arr is None or not isinstance(sh, NamedSharding):
+            return sh
+        mesh = sh.mesh
+        spec = list(sh.spec) + [None] * (len(arr.shape) - len(sh.spec))
+        out = []
+        for dim, axes in zip(arr.shape, spec):
+            if axes is None:
+                out.append(None)
+                continue
+            axes_t = axes if isinstance(axes, tuple) else (axes,)
+            kept = []
+            size = 1
+            for a in axes_t:
+                asz = mesh.shape[a]
+                if dim % (size * asz) == 0:
+                    kept.append(a)
+                    size *= asz
+            out.append(tuple(kept) if len(kept) > 1
+                       else (kept[0] if kept else None))
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree.map(fit, shardings, abstract,
+                        is_leaf=lambda x: hasattr(x, "spec"))
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "temp_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             out_dir: str = "results/dryrun", force: bool = False,
+             rules=None, tag: str = "", unroll: bool = False,
+             variant: str = "") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if unroll:
+        tag = (tag + "_unrolled").lstrip("_")
+    if variant:
+        tag = (tag + "_" + variant).lstrip("_")
+    if tag:
+        mesh_name = f"{mesh_name}__{tag}"
+    cell_dir = os.path.join(out_dir, mesh_name)
+    os.makedirs(cell_dir, exist_ok=True)
+    path = os.path.join(cell_dir, f"{arch}__{shape}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            cached = json.load(f)
+        if cached.get("status") == "ok":
+            return cached
+        # cached failure: retry (the code may have been fixed since)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chips(mesh)
+    if rules is None:
+        rules = FSDP_TP if multi_pod else drop_pod(FSDP_TP)
+    bundle = make_bundle(arch, shape, smoke=False, unroll=unroll,
+                         variant=variant)
+    in_sh = tuple(resolve_tree(s, rules, mesh) for s in bundle.arg_specs)
+    in_sh = _fit_shardings(in_sh, bundle.abstract_args)
+    fn = bundle.get_fn(mesh, rules)
+
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "chips": chips,
+           "model_flops": bundle.model_flops, "notes": bundle.notes,
+           "status": "error"}
+    t0 = time.time()
+    try:
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(
+                *bundle.abstract_args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo_text = compiled.as_text()
+        coll = hlo_mod.collective_stats(hlo_text, chips)
+        flops = float(cost.get("flops", 0.0))
+        bytes_accessed = float(cost.get("bytes accessed", 0.0))
+        # cost_analysis of the partitioned program is per device
+        compute_s = flops / PEAK_FLOPS_BF16
+        memory_s = bytes_accessed / HBM_BW
+        collective_s = coll.wire_bytes / ICI_BW
+        dominant = max((("compute", compute_s), ("memory", memory_s),
+                        ("collective", collective_s)), key=lambda kv: kv[1])
+        rec.update(
+            status="ok",
+            lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+            memory=_mem_dict(mem),
+            hlo_flops_per_device=flops,
+            hlo_bytes_per_device=bytes_accessed,
+            collective_wire_bytes_per_device=coll.wire_bytes,
+            collective_counts=coll.counts,
+            collective_by_op_bytes=coll.by_op_bytes,
+            hlo_ops=hlo_mod.count_ops(hlo_text),
+            compute_term_s=compute_s,
+            memory_term_s=memory_s,
+            collective_term_s=collective_s,
+            dominant_term=dominant[0],
+            model_flops_per_device=bundle.model_flops / chips,
+            useful_flops_ratio=(
+                bundle.model_flops / chips / flops if flops else None),
+        )
+    except Exception as e:  # record the failure; the suite reports it
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def _run_cell_subprocess(arch, shape, *, multi_pod, out_dir, force,
+                         timeout=3600, unroll=False):
+    import json as _json
+    import subprocess
+    import sys
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if unroll:
+        mesh_name += "__unrolled"
+    path = os.path.join(out_dir, mesh_name, f"{arch}__{shape}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            cached = _json.load(f)
+        if cached.get("status") == "ok":
+            return cached
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--out", out_dir]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    if force:
+        cmd.append("--force")
+    if unroll:
+        cmd.append("--unroll")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # child sets its own
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env)
+        crashed = proc.returncode != 0
+        crash_msg = (proc.stderr or proc.stdout or "")[-500:]
+    except subprocess.TimeoutExpired:
+        crashed, crash_msg = True, f"timeout after {timeout}s"
+    if os.path.exists(path):
+        with open(path) as f:
+            return _json.load(f)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "status": "error",
+           "error": f"subprocess crash: {crash_msg}"}
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        _json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--in-process", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="roofline-measurement mode: unroll scans")
+    ap.add_argument("--variant", default="",
+                    help="optimization variant (e.g. 'ring')")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--include-dspc", action="store_true", default=True)
+    args = ap.parse_args()
+
+    if args.list:
+        for a, s in all_cells():
+            print(f"{a:24s} {s}")
+        return
+
+    cells = (all_cells() if args.all
+             else [(args.arch, args.shape)])
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+    failures = 0
+    for mp in meshes:
+        for a, s in cells:
+            if args.all and not args.in_process:
+                # isolate each compile in a subprocess: XLA CPU compiles
+                # of 512-device programs accumulate RAM in-process
+                rec = _run_cell_subprocess(a, s, multi_pod=mp,
+                                           out_dir=args.out,
+                                           force=args.force,
+                                           unroll=args.unroll)
+            else:
+                rec = run_cell(a, s, multi_pod=mp, out_dir=args.out,
+                               force=args.force, unroll=args.unroll,
+                               variant=args.variant)
+            if rec["status"] == "ok":
+                mb = rec["memory"].get("temp_size_in_bytes", 0) / 2**20
+                print(f"[ok]   {rec['mesh']:14s} {a:24s} {s:14s} "
+                      f"compile={rec['compile_s']:7.1f}s "
+                      f"temp={mb:9.1f}MiB dominant={rec['dominant_term']}"
+                      f" ({rec[rec['dominant_term'] + '_term_s']:.2e}s)")
+            else:
+                failures += 1
+                print(f"[FAIL] {rec['mesh']:14s} {a:24s} {s:14s} "
+                      f"{rec['error'][:140]}")
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""HLO text analysis: collective-traffic extraction for the roofline.
+
+``cost_analysis()`` has no collective term, so we parse the *optimized*
+HLO of the compiled executable and estimate per-device wire bytes for
+every collective op.  Conventions (ring-algorithm estimates, documented
+in EXPERIMENTS.md SRoofline):
+
+  op                  wire bytes per device (k = participant group size)
+  ------------------  --------------------------------------------------
+  all-gather          result * (k - 1) / k          (receives all shards)
+  all-reduce          2 * result * (k - 1) / k      (RS + AG ring)
+  reduce-scatter      result * (k - 1)              (operand = k * result)
+  all-to-all          result * (k - 1) / k
+  collective-permute  result                        (one hop)
+
+Result sizes come from the op's result shape; ``k`` from its
+``replica_groups`` attribute (defaults to the total device count).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|"
+                       r"u64|f64|c64|c128)\[([0-9,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    result_bytes: float = 0.0
+    counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    by_op_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+def collective_stats(hlo_text: str, total_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape_txt, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # counted at -start
+        result = _shape_bytes(shape_txt)
+        if result == 0:
+            continue
+        k = total_devices
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            k = max(len(gm.group(1).split(",")), 1)
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                k = max(int(gi.group(2)), 1)
+        if k <= 1:
+            wire = 0.0
+        elif op == "all-gather":
+            wire = result * (k - 1) / k
+        elif op == "all-reduce":
+            wire = 2.0 * result * (k - 1) / k
+        elif op == "reduce-scatter":
+            wire = float(result) * (k - 1)
+        elif op == "all-to-all":
+            wire = result * (k - 1) / k
+        else:  # collective-permute
+            wire = float(result)
+        stats.wire_bytes += wire
+        stats.result_bytes += result
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.by_op_bytes[op] = stats.by_op_bytes.get(op, 0.0) + wire
+    return stats
+
+
+def count_ops(hlo_text: str, names=("fusion", "while", "custom-call",
+                                    "dot", "convolution")) -> Dict[str, int]:
+    out = {}
+    for n in names:
+        out[n] = len(re.findall(rf"\b{n}\(", hlo_text))
+    return out

@@ -1,0 +1,117 @@
+"""Roofline report: reads the dry-run JSONs and emits the EXPERIMENTS.md
+SRoofline table.
+
+  compute term    = HLO_FLOPs / peak_FLOPs            (per device)
+  memory term     = HLO_bytes / HBM_bw                (per device)
+  collective term = wire_bytes / ICI_bw               (per device)
+
+plus MODEL_FLOPS / HLO_FLOPs (useful-compute ratio) and the dominant
+bottleneck.  Usage:
+
+  PYTHONPATH=src python -m repro.launch.roofline [--mesh pod16x16] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(mesh: str, out_dir: str = "results/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, mesh, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    return f"{x:.2e}"
+
+
+def table(rows, md=True):
+    hdr = ["arch", "shape", "compute_s", "memory_s", "collective_s",
+           "dominant", "useful/HLO", "temp_GiB", "status"]
+    lines = []
+    if md:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    else:
+        lines.append(",".join(hdr))
+    for r in rows:
+        if r["status"] != "ok":
+            vals = [r["arch"], r["shape"], "-", "-", "-", "-", "-", "-",
+                    "ERROR"]
+        else:
+            ratio = r.get("useful_flops_ratio")
+            vals = [
+                r["arch"], r["shape"],
+                fmt_s(r.get("compute_term_s")),
+                fmt_s(r.get("memory_term_s")),
+                fmt_s(r.get("collective_term_s")),
+                r.get("dominant_term", "-"),
+                f"{ratio:.3f}" if ratio else "-",
+                f"{r['memory'].get('temp_size_in_bytes', 0) / 2**30:.2f}",
+                "ok",
+            ]
+        if md:
+            lines.append("| " + " | ".join(str(v) for v in vals) + " |")
+        else:
+            lines.append(",".join(str(v) for v in vals))
+    return "\n".join(lines)
+
+
+def merged(mesh: str, out_dir: str = "results/dryrun"):
+    """Best-measurement merge: FLOP/byte/collective terms from the
+    unrolled variant when available (exact loop counts), deployable
+    memory/compile from the scanned program."""
+    base = {(r["arch"], r["shape"]): r for r in load(mesh, out_dir)}
+    unrolled = {(r["arch"], r["shape"]): r
+                for r in load(mesh + "__unrolled", out_dir)
+                if r.get("status") == "ok"}
+    rows = []
+    for key, r in sorted(base.items()):
+        r = dict(r)
+        u = unrolled.get(key)
+        if u:
+            for k in ("compute_term_s", "memory_term_s",
+                      "collective_term_s", "dominant_term",
+                      "hlo_flops_per_device", "hlo_bytes_per_device",
+                      "collective_wire_bytes_per_device",
+                      "useful_flops_ratio"):
+                if k in u:
+                    r[k] = u[k]
+            r["terms_source"] = "unrolled"
+        else:
+            r["terms_source"] = "scanned(under-counts loops)"
+        rows.append(r)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--merged", action="store_true",
+                    help="merge unrolled terms with scanned memory")
+    args = ap.parse_args()
+    rows = merged(args.mesh, args.out) if args.merged else load(
+        args.mesh, args.out)
+    print(f"### Roofline table ({args.mesh}"
+          f"{', merged' if args.merged else ''}, {len(rows)} cells)\n")
+    print(table(rows, md=not args.csv))
+    if args.merged:
+        n_unrolled = sum(1 for r in rows
+                         if r.get("terms_source") == "unrolled")
+        print(f"\nterms from unrolled measurements: {n_unrolled}/"
+              f"{len(rows)} cells (rest: scanned programs under-count "
+              f"loop bodies; see EXPERIMENTS.md)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Production training driver: ``--arch <id>`` selects a registry config
+and runs the fault-tolerant loop on whatever mesh the host provides.
+
+On a real cluster this binary is launched once per host by the cluster
+runtime (GKE/XPK-style); ``jax.distributed.initialize()`` is called when
+the coordinator env vars are present, and the mesh is built from the
+global device set.  On this CPU container it runs the smoke config on a
+1x1 mesh -- same code path, scaled down (the full-size lowering is
+exercised by repro.launch.dryrun).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b \
+      --shape train_4k --steps 20 --smoke --ckpt-dir /tmp/ck
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS
+from repro.launch.steps import make_bundle, make_host_args
+from repro.sharding import FSDP_TP, drop_pod
+from repro.train import loop
+
+
+def maybe_init_distributed():
+    if "JAX_COORDINATOR_ADDRESS" in os.environ:
+        jax.distributed.initialize(
+            coordinator_address=os.environ["JAX_COORDINATOR_ADDRESS"],
+            num_processes=int(os.environ.get("JAX_NUM_PROCESSES", "1")),
+            process_id=int(os.environ.get("JAX_PROCESS_ID", "0")))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--shape", default=None,
+                    help="shape name (default: the family's train shape)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    maybe_init_distributed()
+    from repro.configs import get
+    spec = get(args.arch)
+    shape = args.shape or {
+        "lm": "train_4k", "gnn": "molecule", "recsys": "train_batch",
+        "dspc": "inc_update"}[spec.family]
+
+    if not args.smoke and jax.device_count() < 256:
+        print(f"[train] {jax.device_count()} device(s) available; full "
+              f"config needs a pod -- falling back to --smoke")
+        args.smoke = True
+
+    bundle = make_bundle(args.arch, shape, smoke=args.smoke)
+    host_args = make_host_args(args.arch, shape)
+    if len(host_args) != 3:
+        raise SystemExit(f"{args.arch}/{shape} is not a train step; "
+                         f"pick the family's train shape")
+    params, state, batch0 = host_args
+    step_fn = jax.jit(bundle.get_fn(), donate_argnums=(0, 1))
+
+    def data_like(batch, step):
+        # re-seed the host batch deterministically per step
+        return jax.tree.map(
+            lambda x: x, make_host_args(args.arch, shape, seed=step)[2])
+
+    import time
+    saver_dir = args.ckpt_dir
+    from repro.train import checkpoint as ckpt
+    start = 0
+    if saver_dir:
+        try:
+            (params, state), start, _ = ckpt.restore(saver_dir,
+                                                     (params, state))
+            start += 1
+            print(f"[train] resumed from step {start - 1}")
+        except FileNotFoundError:
+            pass
+    for step in range(start, args.steps):
+        t0 = time.perf_counter()
+        params, state, stats = step_fn(params, state, data_like(batch0, step))
+        jax.block_until_ready(stats["loss"])
+        print(f"[train] step {step:4d} loss {float(stats['loss']):.4f} "
+              f"({time.perf_counter() - t0:.2f}s)")
+        if saver_dir and step % args.ckpt_every == 0 and step > 0:
+            ckpt.save(saver_dir, step, (params, state))
+    if saver_dir:
+        ckpt.save(saver_dir, args.steps - 1, (params, state))
+    print("[train] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,361 @@
+"""Attention variants: GQA (qwen2/phi3) and MLA (deepseek-v2), with
+train/prefill and decode (KV-cache) paths.
+
+Sharding strategy (logical axes; resolved in repro.sharding):
+* train/prefill: padded query heads split on "heads" -> model axis; KV
+  heads replicated (GQA KV counts rarely divide TP).
+* decode: the KV cache is **sequence-sharded** on the model axis
+  ("cache_seq"); each shard computes partial attention and XLA combines
+  the softmax reduction.  The explicit shard_map flash-decode merge (one
+  log-sum-exp psum, mirroring ``repro.kernels.flash_decode`` across
+  chips) is the SPerf optimization toggled by ``cfg.sharded_decode``.
+
+Head padding: query-head counts are padded up to a multiple of the tensor
+axis (zeros in the projections) so 40-head/12-head models shard on a
+16-way axis -- the standard production trick (cf. vocab padding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, init_rms, rms_norm
+from repro.sharding import shard_act
+
+# attention score/prob tensors [b, h, t, s]: batch x heads sharded
+SCORES = ("batch", "heads", None, None)
+
+
+# -------------------------------------------------------------------------
+# RoPE
+# -------------------------------------------------------------------------
+def rope_tables(positions, dim: int, theta: float = 10000.0):
+    """positions int32[...] -> (cos, sin) [..., dim/2] fp32."""
+    inv = 1.0 / (theta ** (np.arange(0, dim, 2) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., dim]; rotate-half convention; cos/sin broadcast [..., dim/2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def pad_heads(n_heads: int, multiple: int) -> int:
+    return int(-(-n_heads // multiple) * multiple)
+
+
+# -------------------------------------------------------------------------
+# GQA
+# -------------------------------------------------------------------------
+def init_gqa(key, cfg) -> tuple[dict, dict]:
+    d, hq = cfg.d_model, cfg.padded_heads
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq * dh, cfg.param_dtype),
+        "wk": dense_init(ks[1], d, kv * dh, cfg.param_dtype),
+        "wv": dense_init(ks[2], d, kv * dh, cfg.param_dtype),
+        "wo": dense_init(ks[3], hq * dh, d, cfg.param_dtype),
+    }
+    s = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("heads", "embed"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), cfg.param_dtype)
+        p["bk"] = jnp.zeros((kv * dh,), cfg.param_dtype)
+        p["bv"] = jnp.zeros((kv * dh,), cfg.param_dtype)
+        s["bq"], s["bk"], s["bv"] = ("heads",), ("kv_heads",), ("kv_heads",)
+    return p, s
+
+
+def _proj_qkv_gqa(p, x, cfg, positions):
+    b, t, d = x.shape
+    hq, kv, dh = cfg.padded_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"] + (p.get("bq", 0.0))
+    k = x @ p["wk"] + (p.get("bk", 0.0))
+    v = x @ p["wv"] + (p.get("bv", 0.0))
+    q = q.reshape(b, t, hq, dh)
+    k = k.reshape(b, t, kv, dh)
+    v = v.reshape(b, t, kv, dh)
+    cos, sin = rope_tables(positions, dh, cfg.rope_theta)  # [b, t, dh/2]
+    q = apply_rope(q, cos[:, :, None, :], sin[:, :, None, :])
+    k = apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
+    return q, k, v
+
+
+def gqa_train(p, x, cfg, positions):
+    """Causal self-attention, full sequence (train / prefill core).
+
+    Scores are laid out [b, h, t, s] so one sharding axis covers all
+    query heads (GQA KV heads are broadcast up to h; the expanded K/V
+    are head-sharded so the broadcast is local and free per shard).
+    """
+    b, t, _ = x.shape
+    hq, kv, dh = cfg.padded_heads, cfg.n_kv_heads, cfg.d_head
+    q, k, v = _proj_qkv_gqa(p, x, cfg, positions)
+    rep = -(-hq // kv)
+    k_full = shard_act(jnp.repeat(k, rep, axis=2)[:, :, :hq],
+                       ("batch", None, "heads", None))
+    v_full = shard_act(jnp.repeat(v, rep, axis=2)[:, :, :hq],
+                       ("batch", None, "heads", None))
+    scores = jnp.einsum("bthd,bshd->bhts", q, k_full) / float(np.sqrt(dh))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, None], scores.astype(jnp.float32), -1e30)
+    scores = shard_act(scores, SCORES)
+    probs = shard_act(jax.nn.softmax(scores, axis=-1), SCORES).astype(x.dtype)
+    ctx = jnp.einsum("bhts,bshd->bthd", probs, v_full).reshape(b, t, hq * dh)
+    return ctx @ p["wo"], (k, v)
+
+
+def gqa_decode(p, x, cache_k, cache_v, lengths, cfg):
+    """One-token decode against a (possibly sequence-sharded) cache.
+
+    x: [b, 1, d]; cache_k/v: [b, S, kv, dh]; lengths: int32[b] current
+    valid length.  Returns (out [b, 1, d], new_k, new_v).
+    """
+    b = x.shape[0]
+    hq, kv, dh = cfg.padded_heads, cfg.n_kv_heads, cfg.d_head
+    positions = lengths[:, None]  # [b, 1]
+    q, k_new, v_new = _proj_qkv_gqa(p, x, cfg, positions)
+    z = jnp.int32(0)  # x64 mode: literal 0 would promote to int64
+    cache_k = jax.vmap(lambda c, kn, i: jax.lax.dynamic_update_slice(
+        c, kn, (i, z, z)))(cache_k, k_new, lengths)
+    cache_v = jax.vmap(lambda c, vn, i: jax.lax.dynamic_update_slice(
+        c, vn, (i, z, z)))(cache_v, v_new, lengths)
+    s_len = cache_k.shape[1]
+    # group queries by kv head; pad q up to kv * ceil(hq / kv) so head
+    # counts that don't divide (phi3: 48 padded q heads, 10 kv) work.
+    group = -(-hq // kv)
+    hq_pad = kv * group
+    q = q.reshape(b, hq, dh)
+    if hq_pad != hq:
+        q = jnp.pad(q, ((0, 0), (0, hq_pad - hq), (0, 0)))
+    qg = q.reshape(b, kv, group, dh)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k) / float(np.sqrt(dh))
+    valid = (jnp.arange(s_len)[None] <= lengths[:, None])  # includes new tok
+    scores = jnp.where(valid[:, None, None], scores.astype(jnp.float32),
+                       -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bkgs,bskd->bkgd", probs, cache_v)
+    ctx = ctx.reshape(b, 1, hq_pad * dh)[..., :hq * dh]
+    out = ctx @ p["wo"]
+    return out, cache_k, cache_v
+
+
+# -------------------------------------------------------------------------
+# Blockwise (flash-style) attention for long prefill.
+#
+# Never materializes the t x t score matrix: keys/values stream in blocks
+# with the online-softmax recurrence (same schedule as the flash_decode
+# Pallas kernel, here across the sequence of a full prefill).  No-grad
+# path: prefill is inference; training uses the plain head-sharded path.
+# -------------------------------------------------------------------------
+def blockwise_attention(q, make_kv_block, t_kv: int, block_k: int,
+                        scale: float, q_positions, d_v: int | None = None,
+                        unroll: int = 1):
+    """q [b, h, t, dh]; make_kv_block(start) -> (k [b, Bk, h, dh],
+    v [b, Bk, h, d_v]); causal mask via absolute positions."""
+    b, h, t, dh = q.shape
+    if d_v is None:
+        d_v = dh
+    n_blocks = -(-t_kv // block_k)
+    q32 = q.astype(jnp.float32)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        start = blk * block_k
+        k_blk, v_blk = make_kv_block(start)
+        kt = k_blk.astype(jnp.float32).transpose(0, 2, 1, 3)  # [b,h,Bk,dh]
+        s = jnp.einsum("bhtd,bhsd->bhts", q32, kt) * scale    # [b,h,t,Bk]
+        kpos = start + jnp.arange(block_k, dtype=jnp.int32)
+        mask = q_positions[:, None, :, None] >= kpos[None, None, None, :]
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhts,bshd->bhtd", p, v_blk.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, t), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, t), jnp.float32)
+    acc0 = jnp.zeros((b, h, t, d_v), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0),
+                                  jnp.arange(n_blocks, dtype=jnp.int32),
+                                  unroll=unroll)
+    return acc / jnp.maximum(l, 1e-30)[..., None]        # [b, h, t, dh]
+
+
+def gqa_prefill_blockwise(p, x, cfg, positions, block_k: int = 1024):
+    """GQA prefill with blockwise attention; returns (out, (k, v))."""
+    b, t, _ = x.shape
+    hq, kv, dh = cfg.padded_heads, cfg.n_kv_heads, cfg.d_head
+    q, k, v = _proj_qkv_gqa(p, x, cfg, positions)
+    q = shard_act(jnp.swapaxes(q, 1, 2), SCORES[:2] + (None, None))
+    rep = -(-hq // kv)
+
+    def kv_block(start):
+        k_blk = jax.lax.dynamic_slice_in_dim(k, start, block_k, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, start, block_k, axis=1)
+        k_full = jnp.repeat(k_blk, rep, axis=2)[:, :, :hq]
+        v_full = jnp.repeat(v_blk, rep, axis=2)[:, :, :hq]
+        return k_full, v_full
+
+    ctx = blockwise_attention(q, kv_block, t, block_k, 1.0 / float(np.sqrt(dh)),
+                              positions,
+                              unroll=(-(-t // block_k)
+                                      if cfg.unroll_scans else 1))
+    ctx = jnp.swapaxes(ctx, 1, 2).astype(x.dtype).reshape(b, t, hq * dh)
+    return ctx @ p["wo"], (k, v)
+
+
+def mla_prefill_blockwise(p, x, cfg, positions, block_k: int = 1024):
+    """MLA prefill: k_nope/v are re-expanded from the compressed cache
+    per block (never materialized at full length)."""
+    b, t, _ = x.shape
+    h = cfg.padded_heads
+    dn, dr, dv, cl = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                      cfg.kv_lora)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)        # [b, t, h, .]
+    ckv, k_rope = _mla_ckv(p, x, cfg, positions)         # [b, t, cl/dr]
+    # fold the rope part into extended head dims so one blockwise pass
+    # handles both terms: q_ext = [q_nope, q_rope], k_ext = [k_nope,
+    # k_rope broadcast]
+    q_ext = jnp.concatenate([q_nope, q_rope], axis=-1)   # [b, t, h, dn+dr]
+    q_ext = shard_act(jnp.swapaxes(q_ext, 1, 2),
+                      SCORES[:2] + (None, None))
+
+    def kv_block(start):
+        ckv_blk = jax.lax.dynamic_slice_in_dim(ckv, start, block_k, axis=1)
+        kr_blk = jax.lax.dynamic_slice_in_dim(k_rope, start, block_k, axis=1)
+        k_nope = (ckv_blk @ p["wuk"]).reshape(b, block_k, h, dn)
+        kr_full = jnp.broadcast_to(kr_blk[:, :, None, :],
+                                   (b, block_k, h, dr))
+        k_ext = jnp.concatenate([k_nope, kr_full], axis=-1)
+        v_blk = (ckv_blk @ p["wuv"]).reshape(b, block_k, h, dv)
+        return k_ext, v_blk
+
+    ctx = blockwise_attention(q_ext, kv_block, t, block_k,
+                              1.0 / float(np.sqrt(dn + dr)), positions,
+                              d_v=dv,
+                              unroll=(-(-t // block_k)
+                                      if cfg.unroll_scans else 1))
+    ctx = jnp.swapaxes(ctx, 1, 2).astype(x.dtype).reshape(b, t, h * dv)
+    return ctx @ p["wo"], (ckv, k_rope)
+
+
+# -------------------------------------------------------------------------
+# MLA (deepseek-v2)
+# -------------------------------------------------------------------------
+def init_mla(key, cfg) -> tuple[dict, dict]:
+    d, h = cfg.d_model, cfg.padded_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    cl, ql = cfg.kv_lora, cfg.q_lora
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {}
+    s: dict[str, Any] = {}
+    if ql:
+        p["wdq"] = dense_init(ks[0], d, ql, cfg.param_dtype)
+        s["wdq"] = ("embed", None)
+        p["q_norm"], s["q_norm"] = init_rms(ql, cfg.param_dtype)
+        p["wuq"] = dense_init(ks[1], ql, h * (dn + dr), cfg.param_dtype)
+        s["wuq"] = (None, "heads")
+    else:
+        p["wq"] = dense_init(ks[1], d, h * (dn + dr), cfg.param_dtype)
+        s["wq"] = ("embed", "heads")
+    p["wdkv"] = dense_init(ks[2], d, cl + dr, cfg.param_dtype)
+    s["wdkv"] = ("embed", None)
+    p["kv_norm"], s["kv_norm"] = init_rms(cl, cfg.param_dtype)
+    p["wuk"] = dense_init(ks[3], cl, h * dn, cfg.param_dtype)
+    s["wuk"] = ("kv_lora", "heads")
+    p["wuv"] = dense_init(ks[4], cl, h * dv, cfg.param_dtype)
+    s["wuv"] = ("kv_lora", "heads")
+    p["wo"] = dense_init(ks[5], h * dv, d, cfg.param_dtype)
+    s["wo"] = ("heads", "embed")
+    return p, s
+
+
+def _mla_q(p, x, cfg, positions):
+    b, t, _ = x.shape
+    h, dn, dr = cfg.padded_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora:
+        q = rms_norm(p["q_norm"], x @ p["wdq"]) @ p["wuq"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(b, t, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    cos, sin = rope_tables(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos[:, :, None, :], sin[:, :, None, :])
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, x, cfg, positions):
+    dr, cl = cfg.qk_rope_dim, cfg.kv_lora
+    dkv = x @ p["wdkv"]
+    ckv = rms_norm(p["kv_norm"], dkv[..., :cl])
+    k_rope = dkv[..., cl:]
+    cos, sin = rope_tables(positions, dr, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, cos, sin)
+    return ckv, k_rope
+
+
+def mla_train(p, x, cfg, positions):
+    b, t, _ = x.shape
+    h = cfg.padded_heads
+    dn, dr, dv, cl = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                      cfg.kv_lora)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    ckv, k_rope = _mla_ckv(p, x, cfg, positions)
+    k_nope = (ckv @ p["wuk"]).reshape(b, t, h, dn)
+    v = (ckv @ p["wuv"]).reshape(b, t, h, dv)
+    scores = (jnp.einsum("bthd,bshd->bhts", q_nope, k_nope) +
+              jnp.einsum("bthd,bsd->bhts", q_rope, k_rope)) / float(np.sqrt(dn + dr))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, None], scores.astype(jnp.float32), -1e30)
+    scores = shard_act(scores, SCORES)
+    probs = shard_act(jax.nn.softmax(scores, axis=-1), SCORES).astype(x.dtype)
+    ctx = jnp.einsum("bhts,bshd->bthd", probs, v).reshape(b, t, h * dv)
+    return ctx @ p["wo"], (ckv, k_rope)
+
+
+def mla_decode(p, x, cache_ckv, cache_kr, lengths, cfg):
+    """Absorbed-matmul MLA decode: scores live in the compressed space, so
+    the cache is tiny ([S, kv_lora + rope]) and per-step FLOPs scale with
+    kv_lora, not heads x head_dim."""
+    b = x.shape[0]
+    h = cfg.padded_heads
+    dn, dr, dv, cl = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                      cfg.kv_lora)
+    positions = lengths[:, None]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)   # [b, 1, h, .]
+    ckv_new, kr_new = _mla_ckv(p, x, cfg, positions)  # [b, 1, cl], [b, 1, dr]
+    z = jnp.int32(0)  # x64 mode: literal 0 would promote to int64
+    cache_ckv = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, z)))(cache_ckv, ckv_new, lengths)
+    cache_kr = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, z)))(cache_kr, kr_new, lengths)
+    wuk = p["wuk"].reshape(cl, h, dn)
+    q_lat = jnp.einsum("bhd,chd->bhc", q_nope[:, 0], wuk)   # absorb W_uk
+    scores = (jnp.einsum("bhc,bsc->bhs", q_lat, cache_ckv) +
+              jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], cache_kr))
+    scores = scores / float(np.sqrt(dn + dr))
+    s_len = cache_ckv.shape[1]
+    valid = jnp.arange(s_len)[None] <= lengths[:, None]
+    scores = jnp.where(valid[:, None], scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhs,bsc->bhc", probs, cache_ckv)
+    wuv = p["wuv"].reshape(cl, h, dv)
+    ctx = jnp.einsum("bhc,chd->bhd", ctx_lat, wuv).reshape(b, 1, h * dv)
+    return ctx @ p["wo"], cache_ckv, cache_kr

@@ -1,0 +1,274 @@
+"""DIEN: Deep Interest Evolution Network [Zhou et al., arXiv:1809.03672].
+
+CTR model over user behavior sequences:
+
+  1. **Embedding layer** -- item + category id embeddings (the huge
+     sparse tables; row-sharded on the model axis) plus multi-hot user
+     profile fields reduced with the EmbeddingBag primitive
+     (``jnp.take`` + ``segment_sum``; Pallas kernel on TPU).
+  2. **Interest extractor** -- GRU over the behavior sequence, with the
+     auxiliary loss (next-behavior discrimination vs sampled negatives).
+  3. **Interest evolution** -- attention scores between the target item
+     and extractor states drive an **AUGRU** (GRU whose update gate is
+     scaled by the attention weight).
+  4. **MLP head** -- mlp=200-80 -> logit (PReLU activations).
+
+Assigned config: embed_dim=18, seq_len=100, gru_dim=108, mlp=200-80,
+interaction=augru.
+
+Shapes: ``train_batch`` (65536) lowers the train step; ``serve_p99`` /
+``serve_bulk`` lower the scoring forward; ``retrieval_cand`` scores one
+user state against 10^6 candidates as a single batched dot against the
+(sharded) item table -- the industry two-tower retrieval pattern, NOT a
+per-candidate AUGRU loop (the evolution path is target-conditioned and
+is reserved for ranking).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    name: str = "dien"
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp: tuple = (200, 80)
+    n_items: int = 4_000_000
+    n_cates: int = 10_000
+    n_profile_vocab: int = 100_000   # hashed multi-hot profile features
+    profile_bags: int = 4            # multi-hot fields (EmbeddingBag)
+    bag_size: int = 8                # nnz per bag (padded)
+    aux_weight: float = 1.0
+    dtype: Any = jnp.float32
+    unroll_scans: bool = False   # roofline-measurement mode (see
+                                 # transformer.TransformerConfig)
+
+    @property
+    def beh_dim(self) -> int:        # item + cate embedding concat
+        return 2 * self.embed_dim
+
+
+# -------------------------------------------------------------------------
+# Params
+# -------------------------------------------------------------------------
+def _gru_init(key, d_in, d_h, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wx": dense_init(k1, d_in, 3 * d_h, dtype),   # update/reset/cand
+        "wh": dense_init(k2, d_h, 3 * d_h, dtype),
+        "b": jnp.zeros((3 * d_h,), dtype),
+    }
+
+
+def _mlp_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for k, a, b in zip(ks, dims[:-1], dims[1:]):
+        layers.append({"w": dense_init(k, a, b, dtype),
+                       "b": jnp.zeros((b,), dtype),
+                       "p": jnp.full((b,), 0.25, dtype)})  # PReLU slope
+    return layers
+
+
+def init_params(cfg: DIENConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    d, h = cfg.beh_dim, cfg.gru_dim
+    head_in = h + cfg.beh_dim + cfg.profile_bags * cfg.embed_dim
+    return {
+        "item_table": dense_init(ks[0], cfg.n_items, cfg.embed_dim,
+                                 cfg.dtype, scale=0.01),
+        "cate_table": dense_init(ks[1], cfg.n_cates, cfg.embed_dim,
+                                 cfg.dtype, scale=0.01),
+        "profile_table": dense_init(ks[2], cfg.n_profile_vocab,
+                                    cfg.embed_dim, cfg.dtype, scale=0.01),
+        "gru": _gru_init(ks[3], d, h, cfg.dtype),
+        "augru": _gru_init(ks[4], d, h, cfg.dtype),
+        "attn": dense_init(ks[5], h, cfg.beh_dim, cfg.dtype),
+        "head": _mlp_init(ks[6], (head_in,) + tuple(cfg.mlp) + (1,),
+                          cfg.dtype),
+        "aux": _mlp_init(ks[7], (h + d, 100, 1), cfg.dtype),
+    }
+
+
+def param_specs(cfg: DIENConfig):
+    return {
+        "item_table": ("table_rows", None),
+        "cate_table": ("table_rows", None),
+        "profile_table": ("table_rows", None),
+        "gru": {"wx": (), "wh": (), "b": ()},
+        "augru": {"wx": (), "wh": (), "b": ()},
+        "attn": (),
+        "head": [{"w": (), "b": (), "p": ()} for _ in
+                 range(len(cfg.mlp) + 1)],
+        "aux": [{"w": (), "b": (), "p": ()} for _ in range(2)],
+    }
+
+
+def _prelu_mlp(layers, x, last_linear=True):
+    for i, lay in enumerate(layers):
+        x = x @ lay["w"] + lay["b"]
+        if i < len(layers) - 1 or not last_linear:
+            x = jnp.where(x >= 0, x, lay["p"] * x)
+    return x
+
+
+# -------------------------------------------------------------------------
+# Embedding ops (the recsys hot path)
+# -------------------------------------------------------------------------
+def behavior_embed(params, item_ids, cate_ids):
+    """[B, T] ids -> [B, T, 2 * embed_dim]."""
+    it = jnp.take(params["item_table"], item_ids, axis=0)
+    ct = jnp.take(params["cate_table"], cate_ids, axis=0)
+    return jnp.concatenate([it, ct], axis=-1)
+
+
+def profile_embed(params, bag_ids, cfg: DIENConfig):
+    """EmbeddingBag over multi-hot profile fields.
+
+    bag_ids int32[B, bags, bag_size] (pad = n_profile_vocab - 1 with zero
+    weight convention: pads point at a dedicated zero row).
+    Implemented as gather + mean-reduce; on TPU the Pallas
+    ``embedding_bag`` kernel implements the same contract.
+    """
+    b = bag_ids.shape[0]
+    emb = jnp.take(params["profile_table"], bag_ids, axis=0)
+    return jnp.mean(emb, axis=2).reshape(b, -1)   # [B, bags * embed_dim]
+
+
+# -------------------------------------------------------------------------
+# GRU / AUGRU (lax.scan over the behavior sequence)
+# -------------------------------------------------------------------------
+def _gru_cell(p, h, x, a=None):
+    """Standard GRU; if ``a`` is given the update gate is scaled by it
+    (AUGRU, [arXiv:1809.03672] eq. 7-8)."""
+    gates = x @ p["wx"] + h @ p["wh"] + p["b"]
+    dh = h.shape[-1]
+    u = jax.nn.sigmoid(gates[..., :dh])
+    r = jax.nn.sigmoid(gates[..., dh:2 * dh])
+    cand_in = x @ p["wx"][:, 2 * dh:] + (r * h) @ p["wh"][:, 2 * dh:] \
+        + p["b"][2 * dh:]
+    c = jnp.tanh(cand_in)
+    if a is not None:
+        u = a * u
+    return (1.0 - u) * h + u * c
+
+
+def run_gru(p, xs, mask, unroll: int = 1):
+    """xs [B, T, D], mask [B, T] -> all hidden states [B, T, H]."""
+    b, t, _ = xs.shape
+    dh = p["wh"].shape[0]
+    h0 = jnp.zeros((b, dh), xs.dtype)
+
+    def step(h, inp):
+        x, m = inp
+        h_new = _gru_cell(p, h, x)
+        h = jnp.where(m[:, None], h_new, h)
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (jnp.swapaxes(xs, 0, 1),
+                                    jnp.swapaxes(mask, 0, 1)),
+                         unroll=unroll)
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def run_augru(p, xs, att, mask, unroll: int = 1):
+    """AUGRU: att [B, T] attention scores scale the update gate."""
+    b, t, _ = xs.shape
+    dh = p["wh"].shape[0]
+    h0 = jnp.zeros((b, dh), xs.dtype)
+
+    def step(h, inp):
+        x, a, m = inp
+        h_new = _gru_cell(p, h, x, a[:, None])
+        h = jnp.where(m[:, None], h_new, h)
+        return h, None
+
+    h, _ = jax.lax.scan(step, h0, (jnp.swapaxes(xs, 0, 1),
+                                   jnp.swapaxes(att, 0, 1),
+                                   jnp.swapaxes(mask, 0, 1)),
+                        unroll=unroll)
+    return h
+
+
+# -------------------------------------------------------------------------
+# Forward / losses
+# -------------------------------------------------------------------------
+def interest_states(params, batch, cfg: DIENConfig):
+    """Behavior GRU states (target-independent)."""
+    beh = behavior_embed(params, batch["hist_items"], batch["hist_cates"])
+    unroll = cfg.seq_len if cfg.unroll_scans else 1
+    return run_gru(params["gru"], beh, batch["hist_mask"],
+                   unroll=unroll), beh
+
+
+def forward(params, batch, cfg: DIENConfig):
+    """CTR logit per example.
+
+    batch: hist_items/hist_cates int32[B, T], hist_mask bool[B, T],
+    target_item/target_cate int32[B], profile int32[B, bags, bag_size].
+    """
+    hs, beh = interest_states(params, batch, cfg)
+    tgt = behavior_embed(params, batch["target_item"][:, None],
+                         batch["target_cate"][:, None])[:, 0]   # [B, D]
+    # attention: a_t = softmax(h_t W e_tgt)
+    scores = jnp.einsum("bth,hd,bd->bt", hs, params["attn"], tgt)
+    scores = jnp.where(batch["hist_mask"], scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    final = run_augru(params["augru"], beh, att, batch["hist_mask"],
+                      unroll=cfg.seq_len if cfg.unroll_scans else 1)
+    prof = profile_embed(params, batch["profile"], cfg)
+    feats = jnp.concatenate([final, tgt, prof], axis=-1)
+    return _prelu_mlp(params["head"], feats)[..., 0]            # [B]
+
+
+def aux_loss(params, hs, beh, neg_beh, mask):
+    """Auxiliary loss: h_t should score e_{t+1} over sampled negatives."""
+    h = hs[:, :-1]                                  # [B, T-1, H]
+    pos = beh[:, 1:]
+    neg = neg_beh[:, 1:]
+    m = mask[:, 1:].astype(h.dtype)
+    pos_logit = _prelu_mlp(params["aux"],
+                           jnp.concatenate([h, pos], -1))[..., 0]
+    neg_logit = _prelu_mlp(params["aux"],
+                           jnp.concatenate([h, neg], -1))[..., 0]
+    ll = (jax.nn.log_sigmoid(pos_logit) + jax.nn.log_sigmoid(-neg_logit)) * m
+    return -jnp.sum(ll) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def make_train_loss(cfg: DIENConfig):
+    def loss_fn(params, batch):
+        hs, beh = interest_states(params, batch, cfg)
+        neg_beh = behavior_embed(params, batch["neg_items"],
+                                 batch["neg_cates"])
+        aux = aux_loss(params, hs, beh, neg_beh, batch["hist_mask"])
+        logits = forward(params, batch, cfg)
+        y = batch["label"].astype(logits.dtype)
+        ce = -jnp.mean(y * jax.nn.log_sigmoid(logits)
+                       + (1 - y) * jax.nn.log_sigmoid(-logits))
+        return ce + cfg.aux_weight * aux
+    return loss_fn
+
+
+def retrieval_scores(params, batch, candidate_ids, cfg: DIENConfig):
+    """Score one (or few) users against n_candidates items: user vector =
+    last extractor state projected through ``attn`` (target-independent),
+    scores = batched dot with candidate item+cate embeddings."""
+    hs, _ = interest_states(params, batch, cfg)
+    lengths = jnp.sum(batch["hist_mask"].astype(jnp.int32), axis=-1)
+    last = jnp.take_along_axis(
+        hs, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)[:, 0]
+    user_vec = last @ params["attn"]                # [B, beh_dim]
+    cand = behavior_embed(params, candidate_ids["item"],
+                          candidate_ids["cate"])    # [N_cand, beh_dim]
+    return user_vec @ cand.T                        # [B, N_cand]

@@ -1,0 +1,13 @@
+"""GNN architecture family on the shared segment-sum message-passing
+substrate (the same scatter-add primitive as the DSPC edge relaxation).
+
+* ``graph``         -- padded GraphBatch + segment aggregations.
+* ``irreps``        -- SO(3) machinery (real SH, CG, Wigner D).
+* ``egnn``          -- E(n)-equivariant GNN (scalar-distance messages).
+* ``pna``           -- Principal Neighbourhood Aggregation.
+* ``nequip``        -- tensor-product interatomic potential (l_max=2).
+* ``equiformer_v2`` -- eSCN SO(2) graph attention (l_max=6, m_max=2).
+* ``sampler``       -- k-hop neighbor sampler for ``minibatch_lg``.
+"""
+
+from repro.models.gnn.graph import GraphBatch, batch_spec, from_numpy

@@ -1,0 +1,135 @@
+"""EGNN: E(n)-equivariant graph network [Satorras et al., arXiv:2102.09844].
+
+The cheap equivariant model: messages depend on invariants (h_i, h_j,
+||x_i - x_j||^2), coordinates update along relative vectors:
+
+    m_ij  = phi_e(h_i, h_j, ||x_i - x_j||^2)
+    x_i' = x_i + C * sum_j (x_i - x_j) * phi_x(m_ij)
+    h_i' = phi_h(h_i, sum_j m_ij)
+
+Assigned config: n_layers=4, d_hidden=64.  Equivariance: outputs
+(energies) are E(n)-invariant, coordinates are E(n)-equivariant
+(tested in tests/models/test_gnn.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.gnn.graph import GraphBatch, agg_sum, graph_readout
+
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    name: str = "egnn"
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_in: int = 16
+    n_out: int = 1                   # graph-level targets (energy)
+    coord_agg_mean: bool = True      # C = 1/deg (stabilizes large graphs)
+    dtype: Any = jnp.float32
+
+
+def _mlp_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": dense_init(k, a, b, dtype), "b": jnp.zeros((b,), dtype)}
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def _mlp(params, x, act=jax.nn.silu, last_act=False):
+    for i, lay in enumerate(params):
+        x = x @ lay["w"] + lay["b"]
+        if i < len(params) - 1 or last_act:
+            x = act(x)
+    return x
+
+
+def _mlp_spec(params):
+    return [{"w": (None, None), "b": (None,)} for _ in params]
+
+
+def init_params(cfg: EGNNConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    h = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        k_e, k_x, k_h = jax.random.split(ks[i], 3)
+        layers.append({
+            "phi_e": _mlp_init(k_e, [2 * h + 1, h, h], cfg.dtype),
+            "phi_x": _mlp_init(k_x, [h, h, 1], cfg.dtype),
+            "phi_h": _mlp_init(k_h, [2 * h, h, h], cfg.dtype),
+        })
+    return {
+        "embed": _mlp_init(ks[-2], [cfg.d_in, h], cfg.dtype),
+        "layers": layers,
+        "head": _mlp_init(ks[-1], [h, h, cfg.n_out], cfg.dtype),
+    }
+
+
+def param_specs(cfg: EGNNConfig):
+    p = init_params(dataclasses.replace(cfg, d_hidden=4, d_in=2, n_layers=1),
+                    jax.random.PRNGKey(0))
+    spec = jax.tree.map(lambda _: None, p)
+    # replicate everything (GNN weights are tiny); edges carry the sharding
+    return jax.tree.map(lambda _: (), spec, is_leaf=lambda x: x is None)
+
+
+def _layer(lp, h, x, batch: GraphBatch, cfg: EGNNConfig):
+    s, r = batch.senders, batch.receivers
+    n1 = batch.n_node + 1
+    rel = x[r] - x[s]                                     # x_i - x_j at recv i
+    d2 = jnp.sum(rel * rel, axis=-1, keepdims=True)
+    m = _mlp(lp["phi_e"], jnp.concatenate([h[r], h[s], d2], -1),
+             last_act=True)                               # [E, h]
+    m = m * batch.edge_mask[:, None].astype(m.dtype)
+    # coordinate update
+    w = _mlp(lp["phi_x"], m)                              # [E, 1]
+    coord_msg = rel * w
+    dx = agg_sum(coord_msg, r, n1)
+    if cfg.coord_agg_mean:
+        deg = agg_sum(batch.edge_mask.astype(x.dtype), r, n1)
+        dx = dx / (deg[:, None] + 1.0)
+    x = x + dx
+    # feature update
+    magg = agg_sum(m, r, n1)
+    h = h + _mlp(lp["phi_h"], jnp.concatenate([h, magg], -1))
+    return h, x
+
+
+def forward(params, batch: GraphBatch, cfg: EGNNConfig):
+    """Returns (graph_out [G, n_out], h [N+1, d], x [N+1, 3])."""
+    h = _mlp(params["embed"], batch.nodes.astype(cfg.dtype))
+    x = batch.pos.astype(cfg.dtype)
+    for lp in params["layers"]:
+        h, x = _layer(lp, h, x, batch, cfg)
+    node_out = _mlp(params["head"], h)
+    node_out = node_out * batch.node_mask[:, None].astype(node_out.dtype)
+    g = graph_readout(node_out, batch.graph_id, cfg_n_graph(batch), "sum")
+    return g, h, x
+
+
+def cfg_n_graph(batch: GraphBatch) -> int:
+    return batch.n_graph
+
+
+def node_forward(params, batch: GraphBatch, cfg: EGNNConfig):
+    """Node-level logits [n_node, n_out] (for classification shapes)."""
+    h = _mlp(params["embed"], batch.nodes.astype(cfg.dtype))
+    x = batch.pos.astype(cfg.dtype)
+    for lp in params["layers"]:
+        h, x = _layer(lp, h, x, batch, cfg)
+    return _mlp(params["head"], h)[: batch.n_node]
+
+
+def make_loss(cfg: EGNNConfig):
+    def loss_fn(params, batch_and_target):
+        batch, target = batch_and_target
+        g, _, _ = forward(params, batch, cfg)
+        return jnp.mean((g - target) ** 2)
+    return loss_fn

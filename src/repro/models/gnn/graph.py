@@ -1,0 +1,137 @@
+"""Fixed-shape padded graph batches (the GNN substrate's data format).
+
+Same conventions as the DSPC core graph (``repro.core.graph``): one extra
+"dump" node row absorbs padded edges, so every array is static-shape and
+jit/pjit-friendly.
+
+* node arrays have ``n_node + 1`` rows; row ``n_node`` is the dump row.
+* padded edge slots point at ``(n_node, n_node)``.
+* ``graph_id`` supports batched small graphs (the ``molecule`` shape):
+  node -> graph assignment, dump row -> ``n_graph`` (a dump graph).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    nodes: jax.Array            # f[N + 1, F] node features (dump row zeros)
+    senders: jax.Array          # int32[E] (pad = N)
+    receivers: jax.Array        # int32[E] (pad = N)
+    pos: Optional[jax.Array]    # f[N + 1, 3] positions or None
+    graph_id: jax.Array         # int32[N + 1] (dump row = G)
+    n_node: int = dataclasses.field(metadata=dict(static=True))
+    n_graph: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_edge(self) -> int:
+        return self.senders.shape[0]
+
+    @property
+    def node_mask(self) -> jax.Array:
+        return jnp.arange(self.n_node + 1) < self.n_node
+
+    @property
+    def edge_mask(self) -> jax.Array:
+        return self.senders != self.n_node
+
+
+def batch_spec(n_node: int, n_edge: int, d_feat: int, *, with_pos: bool,
+               n_graph: int = 1, dtype=jnp.float32) -> GraphBatch:
+    """ShapeDtypeStruct stand-in batch (for dry-runs / eval_shape)."""
+    sds = jax.ShapeDtypeStruct
+    return GraphBatch(
+        nodes=sds((n_node + 1, d_feat), dtype),
+        senders=sds((n_edge,), jnp.int32),
+        receivers=sds((n_edge,), jnp.int32),
+        pos=sds((n_node + 1, 3), dtype) if with_pos else None,
+        graph_id=sds((n_node + 1,), jnp.int32),
+        n_node=n_node,
+        n_graph=n_graph,
+    )
+
+
+def from_numpy(node_feat: np.ndarray, senders: np.ndarray,
+               receivers: np.ndarray, *, pos: np.ndarray | None = None,
+               graph_id: np.ndarray | None = None, n_graph: int = 1,
+               e_cap: int | None = None) -> GraphBatch:
+    """Host-side constructor with dump-row padding."""
+    n, f = node_feat.shape
+    e = len(senders)
+    e_cap = e_cap or e
+    assert e <= e_cap
+    nodes = np.zeros((n + 1, f), node_feat.dtype)
+    nodes[:n] = node_feat
+    s = np.full(e_cap, n, dtype=np.int32)
+    r = np.full(e_cap, n, dtype=np.int32)
+    s[:e] = senders
+    r[:e] = receivers
+    gid = np.full(n + 1, n_graph, dtype=np.int32)
+    gid[:n] = graph_id if graph_id is not None else 0
+    p = None
+    if pos is not None:
+        p = np.zeros((n + 1, 3), pos.dtype)
+        p[:n] = pos
+    return GraphBatch(
+        nodes=jnp.asarray(nodes), senders=jnp.asarray(s),
+        receivers=jnp.asarray(r),
+        pos=jnp.asarray(p) if p is not None else None,
+        graph_id=jnp.asarray(gid), n_node=n, n_graph=n_graph)
+
+
+# -------------------------------------------------------------------------
+# Segment aggregations over edges -> nodes (the message-passing primitive).
+# All take per-edge values [E, ...] and receivers [E]; the dump row makes
+# padded edges harmless.
+# -------------------------------------------------------------------------
+def agg_sum(msgs, receivers, n_rows):
+    return jax.ops.segment_sum(msgs, receivers, num_segments=n_rows)
+
+
+def agg_mean(msgs, receivers, n_rows, eps=1e-9):
+    tot = agg_sum(msgs, receivers, n_rows)
+    deg = jax.ops.segment_sum(jnp.ones_like(receivers, msgs.dtype),
+                              receivers, num_segments=n_rows)
+    return tot / (deg[:, None] + eps), deg
+
+
+def agg_max(msgs, receivers, n_rows):
+    return jax.ops.segment_max(msgs, receivers, num_segments=n_rows)
+
+
+def agg_min(msgs, receivers, n_rows):
+    return jax.ops.segment_min(msgs, receivers, num_segments=n_rows)
+
+
+def agg_std(msgs, receivers, n_rows, eps=1e-9):
+    mean, deg = agg_mean(msgs, receivers, n_rows, eps)
+    sq, _ = agg_mean(msgs * msgs, receivers, n_rows, eps)
+    var = jnp.maximum(sq - mean * mean, 0.0)
+    return jnp.sqrt(var + eps), mean, deg
+
+
+def degrees(receivers, n_rows, dtype=jnp.float32):
+    return jax.ops.segment_sum(
+        jnp.ones_like(receivers, dtype), receivers, num_segments=n_rows)
+
+
+def graph_readout(node_vals, graph_id, n_graph, op: str = "sum"):
+    """Per-graph readout (molecule batches); drops the dump graph."""
+    if op == "sum":
+        out = jax.ops.segment_sum(node_vals, graph_id, num_segments=n_graph + 1)
+    elif op == "mean":
+        tot = jax.ops.segment_sum(node_vals, graph_id, num_segments=n_graph + 1)
+        cnt = jax.ops.segment_sum(jnp.ones_like(graph_id, node_vals.dtype),
+                                  graph_id, num_segments=n_graph + 1)
+        out = tot / jnp.maximum(cnt[:, None], 1.0)
+    else:
+        raise ValueError(op)
+    return out[:n_graph]

@@ -1,0 +1,116 @@
+"""PNA: Principal Neighbourhood Aggregation [Corso et al., arXiv:2004.05718].
+
+Multi-aggregator message passing: messages are reduced with
+{mean, max, min, std} and each aggregate is rescaled by degree scalers
+{identity, amplification, attenuation}:
+
+    s_amp(d) = log(d + 1) / delta,   s_att(d) = delta / log(d + 1)
+
+where delta is the mean log-degree of the training graphs.  The 4 x 3
+concatenation is mixed by a linear layer (the "towers = 1" variant).
+
+Assigned config: n_layers=4, d_hidden=75, aggregators=mean-max-min-std,
+scalers=id-amp-atten.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.gnn.graph import (GraphBatch, agg_max, agg_min, agg_std,
+                                    graph_readout)
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str = "pna"
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_in: int = 16
+    n_out: int = 1
+    delta: float = 2.5               # avg log-degree (dataset statistic)
+    node_level: bool = True          # node classification vs graph readout
+    dtype: Any = jnp.float32
+
+
+def _lin_init(key, a, b, dtype):
+    return {"w": dense_init(key, a, b, dtype), "b": jnp.zeros((b,), dtype)}
+
+
+def _lin(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def init_params(cfg: PNAConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, cfg.n_layers * 2 + 2)
+    h = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append({
+            # message MLP on (h_i, h_j)
+            "msg": _lin_init(ks[2 * i], 2 * h, h, cfg.dtype),
+            # post-aggregation mix: 12 aggregates + self -> h
+            "upd": _lin_init(ks[2 * i + 1], 13 * h, h, cfg.dtype),
+        })
+    return {
+        "embed": _lin_init(ks[-2], cfg.d_in, h, cfg.dtype),
+        "layers": layers,
+        "head": _lin_init(ks[-1], h, cfg.n_out, cfg.dtype),
+    }
+
+
+def param_specs(cfg: PNAConfig):
+    p = init_params(dataclasses.replace(cfg, n_layers=1, d_hidden=4, d_in=2))
+    return jax.tree.map(lambda _: (), p)
+
+
+def _layer(lp, h, batch: GraphBatch, cfg: PNAConfig):
+    s, r = batch.senders, batch.receivers
+    n1 = batch.n_node + 1
+    m = jax.nn.silu(_lin(lp["msg"], jnp.concatenate([h[r], h[s]], -1)))
+    emask = batch.edge_mask.astype(m.dtype)
+    m = m * emask[:, None]
+    # aggregators --------------------------------------------------------
+    std, mean, deg = agg_std(m, r, n1)
+    # max/min must ignore pads: pads contribute -inf/+inf start values
+    neg = jnp.where(batch.edge_mask[:, None], m, -jnp.inf)
+    pos = jnp.where(batch.edge_mask[:, None], m, jnp.inf)
+    mx = jnp.nan_to_num(agg_max(neg, r, n1), neginf=0.0, posinf=0.0)
+    mn = jnp.nan_to_num(agg_min(pos, r, n1), neginf=0.0, posinf=0.0)
+    aggs = jnp.concatenate([mean, mx, mn, std], -1)          # [N+1, 4h]
+    # scalers --------------------------------------------------------------
+    logd = jnp.log1p(deg)[:, None]
+    amp = logd / cfg.delta
+    att = cfg.delta / jnp.maximum(logd, 1e-6)
+    att = jnp.where(deg[:, None] > 0, att, 0.0)
+    scaled = jnp.concatenate([aggs, aggs * amp, aggs * att], -1)  # [N+1, 12h]
+    out = _lin(lp["upd"], jnp.concatenate([h, scaled], -1))
+    return h + jax.nn.silu(out)
+
+
+def forward(params, batch: GraphBatch, cfg: PNAConfig):
+    h = jax.nn.silu(_lin(params["embed"], batch.nodes.astype(cfg.dtype)))
+    for lp in params["layers"]:
+        h = _layer(lp, h, batch, cfg)
+    out = _lin(params["head"], h)
+    if cfg.node_level:
+        return out[: batch.n_node]
+    out = out * batch.node_mask[:, None].astype(out.dtype)
+    return graph_readout(out, batch.graph_id, batch.n_graph, "mean")
+
+
+def make_loss(cfg: PNAConfig):
+    def loss_fn(params, batch_and_target):
+        batch, labels = batch_and_target
+        logits = forward(params, batch, cfg)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - ll)
+    return loss_fn

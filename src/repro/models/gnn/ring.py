@@ -1,0 +1,239 @@
+"""Ring-partitioned equivariant graph attention (SPerf cell-B).
+
+Problem: full-batch Equiformer-v2 on ogb_products keeps node irreps
+[2.45M, 128, 49] REPLICATED per device under the baseline edge-sharded
+plan -- 61 GiB/device, 5.6 TiB total temp (measured; EXPERIMENTS.md
+SPerf).  The node state must be sharded, and then message passing needs
+remote sender rows.
+
+Scheme (2D ring, exact):
+* nodes are partitioned into ``p_data`` blocks; node state lives
+  sharded P("data") and REPLICATED over "model";
+* edges are bucketed host-side by (dst block d, model column m, step s)
+  where ``s = (d - src_block) mod p_data``; each (d, m) device holds
+  ``p_data`` fixed-capacity buckets;
+* step ``s`` fetches the sender block at ring distance ``s`` with ONE
+  ``ppermute`` (shift-by-s, not a chained rotation: each step is then
+  independently rematerializable, which keeps the backward pass O(1) in
+  saved state);
+* attention softmax over incoming edges is computed in TWO phases so no
+  big accumulator is chained through the step loop (only the [n_loc, H]
+  running (max, denom) stats are):
+    phase 1: streaming log-sum-exp of the alpha logits per dst node;
+    phase 2: out = sum_s segment_sum(msg_s * exp(alpha_s - m) / l) --
+    independent terms, each inside jax.checkpoint;
+* partial (m, l, out) combine across the "model" axis with pmax/psum
+  (the flash-attention merge, across chips).
+
+Numerically exact vs the local path (property-tested in
+tests/launch/test_ring_subprocess.py on a 2x2 host mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.gnn import equiformer_v2 as E2
+from repro.models.gnn import irreps as IR
+
+
+# -------------------------------------------------------------------------
+# Host-side bucketing
+# -------------------------------------------------------------------------
+def bucket_edges(senders, receivers, n_nodes: int, p_data: int,
+                 p_model: int, cap: int | None = None):
+    """Bucket edges by (dst block, model column, ring step).
+
+    Returns (src_loc, dst_loc) int32[p_data, p_model, p_data, cap] with
+    pad sentinel = n_loc (the dump row of each block), plus n_loc.
+    Model columns are filled round-robin per (d, s) for load balance.
+    """
+    n_loc = -(-n_nodes // p_data)
+    n_pad = n_loc * p_data
+    senders = np.asarray(senders)
+    receivers = np.asarray(receivers)
+    d_blk = receivers // n_loc
+    s_blk = senders // n_loc
+    step = (d_blk - s_blk) % p_data
+    # per (d, m, s) bucket fill
+    buckets_src = [[[[] for _ in range(p_data)] for _ in range(p_model)]
+                   for _ in range(p_data)]
+    buckets_dst = [[[[] for _ in range(p_data)] for _ in range(p_model)]
+                   for _ in range(p_data)]
+    rr = {}
+    for e in range(len(senders)):
+        d, s = int(d_blk[e]), int(step[e])
+        m = rr.get((d, s), 0)
+        rr[(d, s)] = (m + 1) % p_model
+        buckets_src[d][m][s].append(int(senders[e] % n_loc))
+        buckets_dst[d][m][s].append(int(receivers[e] % n_loc))
+    if cap is None:
+        cap = max(1, max((len(b) for row in buckets_src for col in row
+                          for b in col), default=1))
+    src = np.full((p_data, p_model, p_data, cap), n_loc, np.int32)
+    dst = np.full((p_data, p_model, p_data, cap), n_loc, np.int32)
+    dropped = 0
+    for d in range(p_data):
+        for m in range(p_model):
+            for s in range(p_data):
+                bs = buckets_src[d][m][s][:cap]
+                bd = buckets_dst[d][m][s][:cap]
+                dropped += max(len(buckets_src[d][m][s]) - cap, 0)
+                src[d, m, s, :len(bs)] = bs
+                dst[d, m, s, :len(bd)] = bd
+    return src, dst, n_loc, dropped
+
+
+def bucket_specs(n_nodes: int, n_edges: int, p_data: int, p_model: int,
+                 slack: float = 4.0):
+    """ShapeDtypeStruct buckets for the dry-run (capacity via slack)."""
+    n_loc = -(-n_nodes // p_data)
+    cap = int(np.ceil(n_edges * slack / (p_data * p_model * p_data)))
+    cap = max(-(-cap // 8) * 8, 8)
+    sds = jax.ShapeDtypeStruct
+    shape = (p_data, p_model, p_data, cap)
+    return sds(shape, jnp.int32), sds(shape, jnp.int32), n_loc
+
+
+# -------------------------------------------------------------------------
+# Device code
+# -------------------------------------------------------------------------
+def _shift_perm(p_data: int, s: int):
+    """ppermute perm fetching the block at ring distance s."""
+    return [(i, (i + s) % p_data) for i in range(p_data)]
+
+
+def _ring_attn_local(lp, x_loc, pos_loc, src_b, dst_b, cfg, p_data: int,
+                     data_axis: str, model_axis: str):
+    """Per-device body (inside shard_map).
+
+    x_loc [n_loc(+1), C, K] (last row = dump), pos_loc [n_loc(+1), 3],
+    src_b/dst_b local view [1, 1, p_data, cap] -> squeezed here.
+    """
+    src_b = src_b[0, 0]
+    dst_b = dst_b[0, 0]
+    n1 = x_loc.shape[0]                      # n_loc + 1 (dump row)
+    heads = cfg.n_heads
+
+    # phase 1: streaming max of alpha, entirely under stop_gradient (the
+    # log-sum-exp max shift is analytically gradient-free).  Static
+    # python loop: ppermute permutations must be concrete.
+    m = jnp.full((n1, heads), -1e30, jnp.float32)
+    xs = jax.lax.stop_gradient(x_loc)
+    ps = jax.lax.stop_gradient(pos_loc)
+    lps = jax.lax.stop_gradient(lp)
+    for s in range(p_data):
+        def body(x_in, p_in, s=s):
+            x_blk = jax.lax.ppermute(x_in, data_axis, _shift_perm(p_data, s))
+            p_blk = jax.lax.ppermute(p_in, data_axis, _shift_perm(p_data, s))
+            src, dst = src_b[s], dst_b[s]
+            rel = p_in[dst] - p_blk[src]
+            _, alpha = E2.edge_messages(lps, x_blk[src], x_in[dst], rel, cfg)
+            alpha = jnp.where((src < n1 - 1)[:, None], alpha, -1e30)
+            return jax.ops.segment_max(alpha, dst, num_segments=n1)
+
+        # no jax.checkpoint here: everything is stop-gradded constant, so
+        # nothing is saved for bwd (and checkpoint would materialize
+        # zero tangents into pmax, which has no JVP rule)
+        blk_max = body(xs, ps)
+        m = jnp.maximum(m, jnp.nan_to_num(blk_max, neginf=-1e30))
+        # serialize the steps: without a data dependence the scheduler
+        # keeps all 16 steps' message buffers live at once (measured
+        # 3.4 TiB/device; EXPERIMENTS.md cell-B it-2)
+        m, xs, ps = jax.lax.optimization_barrier((m, xs, ps))
+    m = jax.lax.stop_gradient(jax.lax.pmax(m, model_axis))
+
+    # phase 2: independent (numerator, denominator) contributions; both
+    # differentiable, divided only at the end (exact softmax gradients).
+    num = jnp.zeros((n1, cfg.d_hidden, cfg.comps), jnp.float32)
+    den = jnp.zeros((n1, heads), jnp.float32)
+    for s in range(p_data):
+        def body2(x_in, p_in, m, s=s):
+            x_blk = jax.lax.ppermute(x_in, data_axis, _shift_perm(p_data, s))
+            p_blk = jax.lax.ppermute(p_in, data_axis, _shift_perm(p_data, s))
+            src, dst = src_b[s], dst_b[s]
+            rel = p_in[dst] - p_blk[src]
+            msg, alpha = E2.edge_messages(lp, x_blk[src], x_in[dst], rel,
+                                          cfg)
+            live = (src < n1 - 1)[:, None]
+            # mask BEFORE exp: exp(garbage - (-1e30)) = inf would poison
+            # the where-gradient (inf * 0 = NaN in the cotangent)
+            shifted = jnp.where(live, alpha - m[dst], -1e30)
+            w = jnp.exp(shifted)
+            msg = E2.head_weight(w, msg.astype(jnp.float32), cfg)
+            return (jax.ops.segment_sum(msg, dst, num_segments=n1),
+                    jax.ops.segment_sum(w, dst, num_segments=n1))
+
+        dn, dd = jax.checkpoint(body2)(x_loc, pos_loc, m)
+        num = num + dn
+        den = den + dd
+        num, den, x_loc, pos_loc = jax.lax.optimization_barrier(
+            (num, den, x_loc, pos_loc))
+    num = jax.lax.psum(num, model_axis)
+    den = jnp.maximum(jax.lax.psum(den, model_axis), 1e-30)
+    hsz = cfg.d_hidden // cfg.n_heads
+    out = num / jnp.repeat(den, hsz, axis=-1)[..., None]
+    return out.astype(x_loc.dtype)
+
+
+def make_ring_attn(mesh: Mesh, cfg, p_data: int,
+                   data_axis: str = "data", model_axis: str = "model"):
+    """shard_map-wrapped ring attention:
+    (layer_params, x [p_data*(n_loc+1), C, K] sharded data,
+     pos likewise, buckets sharded (data, model)) -> aggregated messages
+    (same sharding as x)."""
+
+    local = functools.partial(_ring_attn_local, cfg=cfg, p_data=p_data,
+                              data_axis=data_axis, model_axis=model_axis)
+
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(data_axis), P(data_axis),
+                  P(data_axis, model_axis), P(data_axis, model_axis)),
+        out_specs=P(data_axis),
+    )
+
+
+# -------------------------------------------------------------------------
+# Full ring forward (node-sharded everything outside attention)
+# -------------------------------------------------------------------------
+def forward_ring(params, nodes, pos, src_b, dst_b, cfg, mesh,
+                 p_data: int):
+    """nodes [p_data*(n_loc+1), F], pos likewise (each block carries its
+    own dump row so block-local indices hit block-local pads).
+
+    Returns node irreps (sharded like the inputs).
+    """
+    ring_attn = make_ring_attn(mesh, cfg, p_data)
+    h0 = E2._lin(params["embed"], nodes.astype(cfg.dtype))
+    x = jnp.zeros(nodes.shape[:1] + (cfg.d_hidden, cfg.comps), cfg.dtype)
+    x = x.at[..., 0].set(h0)
+    for lp in params["layers"]:
+        h = IR.equivariant_rms_norm(cfg.l_max, x, lp["norm1"])
+        agg = ring_attn(lp, h, pos, src_b, dst_b)
+        x = x + E2.out_project(lp, agg, cfg)
+        h = IR.equivariant_rms_norm(cfg.l_max, x, lp["norm2"])
+        x = x + E2._ffn(lp, h, cfg)
+    return x
+
+
+def blocked_layout(node_feat, pos, n_nodes: int, p_data: int):
+    """Host-side: rearrange [N, F] into p_data blocks each with a dump
+    row appended -> [p_data * (n_loc + 1), F]."""
+    n_loc = -(-n_nodes // p_data)
+    f = node_feat.shape[1]
+    out = np.zeros((p_data * (n_loc + 1), f), node_feat.dtype)
+    pout = np.zeros((p_data * (n_loc + 1), 3), pos.dtype)
+    for b in range(p_data):
+        lo, hi = b * n_loc, min((b + 1) * n_loc, n_nodes)
+        out[b * (n_loc + 1): b * (n_loc + 1) + (hi - lo)] = node_feat[lo:hi]
+        pout[b * (n_loc + 1): b * (n_loc + 1) + (hi - lo)] = pos[lo:hi]
+    return out, pout, n_loc

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts FFN (deepseek-v2 style: shared + routed top-k).
+
+Dispatch is **sort-based with fixed capacity** (the TPU-friendly dropless
+approximation): token-expert assignments are sorted by expert id, each
+expert receives up to C = ceil(T k / E) * capacity_factor rows, overflow
+drops (scored in the aux loss).  This avoids the O(T E C) one-hot dispatch
+tensor of the classic Mesh-TF einsum formulation, which is infeasible at
+160 experts x 32k tokens.
+
+Expert weight tensors are stacked [E, ...] and sharded on the "experts"
+(-> model) axis; the dispatch buffer [E, C, D] inherits that sharding, so
+XLA lowers the scatter/gather pair into an all-to-all across the expert
+axis (verified in the dry-run HLO; see EXPERIMENTS.md SDry-run).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, swiglu
+from repro.sharding import shard_act
+
+
+def init_moe(key, cfg) -> tuple[dict, dict]:
+    d, e, f = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff
+    fs = cfg.moe_shared * cfg.moe_d_ff
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) /
+                   np.sqrt(d)).astype(cfg.param_dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) /
+                 np.sqrt(d)).astype(cfg.param_dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32) /
+                   np.sqrt(f)).astype(cfg.param_dtype),
+        "ws_gate": dense_init(ks[4], d, fs, cfg.param_dtype),
+        "ws_up": dense_init(ks[5], d, fs, cfg.param_dtype),
+        "ws_down": dense_init(ks[6], fs, d, cfg.param_dtype),
+    }
+    s = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "expert_embed", "expert_mlp"),
+        "w_up": ("experts", "expert_embed", "expert_mlp"),
+        "w_down": ("experts", "expert_mlp", "expert_embed"),
+        "ws_gate": ("embed", "mlp"),
+        "ws_up": ("embed", "mlp"),
+        "ws_down": ("mlp", "embed"),
+    }
+    return p, s
+
+
+def moe_ffn(p, x, cfg):
+    """x [b, t, d] -> (out [b, t, d], aux_loss scalar).
+
+    Grouped local dispatch: tokens are reshaped to [G, T/G, d] with the
+    group axis sharded on "batch" (the data axis).  The argsort, the
+    token gather and the dispatch scatter then run *per group* -- batched
+    ops over a 1-per-device leading dim stay shard-local under SPMD --
+    and the only cross-device movement is the [G, E, C, D] buffer's
+    group->expert resharding, i.e. the canonical MoE all-to-all.
+
+    (First formulation used one global sort: SPMD replicated the
+    [T*k, d] gathered tokens on every device -- 120 GiB/device on
+    deepseek-v2-236b/train_4k.  EXPERIMENTS.md SPerf cell-A it-1.)
+    """
+    b, t, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    n_tok = b * t
+    g = min(cfg.moe_groups, n_tok) or 1
+    while n_tok % g:
+        g //= 2
+    tg = n_tok // g                                            # tokens/group
+    cap = int(np.ceil(tg * k / e * cfg.moe_capacity_factor))
+    tokens = x.reshape(g, tg, d)
+    tokens = shard_act(tokens, ("batch", None, None))
+
+    logits = (tokens.astype(jnp.float32) @ p["router"])        # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # [G, Tg, k]
+    if cfg.moe_norm_topk:
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # aux load-balance loss (switch-style)
+    density = jnp.mean(jax.nn.one_hot(top_e[..., 0], e), axis=(0, 1))
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * density_proxy) * e
+
+    # ---- per-group sort-based dispatch ---------------------------------
+    flat_e = top_e.reshape(g, tg * k)
+    flat_p = top_p.reshape(g, tg * k)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tg, dtype=jnp.int32), k)[None], (g, tg * k))
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    st = jnp.take_along_axis(flat_tok, order, axis=1)
+    sp = jnp.take_along_axis(flat_p, order, axis=1)
+    # rank within expert block (per group)
+    first_of_e = jax.vmap(
+        lambda row: jnp.searchsorted(row, row, side="left"))(se)
+    pos = (jnp.arange(tg * k, dtype=jnp.int32)[None] - first_of_e)
+    keep = pos < cap
+    slot_e = jnp.where(keep, se, e)                            # dump expert
+    slot_c = jnp.where(keep, pos, 0)
+
+    # vmapped per-group scatter/gather: batched ops over the sharded
+    # group dim stay shard-local under SPMD (explicit group indices in a
+    # flat scatter defeat the partitioner -- SPerf cell-A it-2)
+    def disp(tok_g, se_g, sc_g, st_g):
+        picked = jnp.take(tok_g, st_g, axis=0)                 # [Tgk, D]
+        return jnp.zeros((e + 1, cap, d), x.dtype).at[
+            se_g, sc_g].set(picked)
+
+    buf = jax.vmap(disp)(tokens, slot_e, slot_c, st)           # [G,E+1,C,D]
+    # group axis: data-sharded; expert axis: model-sharded -> all-to-all
+    h = shard_act(buf[:, :e], ("batch", "experts", None, None))
+    act = swiglu(jnp.einsum("gecd,edf->gecf", h, p["w_gate"]),
+                 jnp.einsum("gecd,edf->gecf", h, p["w_up"]))
+    out_e = jnp.einsum("gecf,efd->gecd", act, p["w_down"])     # [G,E,C,D]
+    out_e = shard_act(out_e, ("batch", "experts", None, None))
+
+    def undisp(out_g, se_g, sc_g, st_g, w_g):
+        gathered = out_g[se_g, sc_g] * w_g[:, None].astype(x.dtype)
+        return jnp.zeros((tg, d), x.dtype).at[st_g].add(gathered)
+
+    out_pad = jnp.concatenate(
+        [out_e, jnp.zeros((g, 1, cap, d), x.dtype)], axis=1)
+    routed = jax.vmap(undisp)(out_pad, slot_e, slot_c, st, sp * keep)
+
+    shared = swiglu(tokens @ p["ws_gate"], tokens @ p["ws_up"]) @ p["ws_down"]
+    return (routed + shared).reshape(b, t, d), aux
+
+
+def init_dense_ffn(key, d: int, f: int, dtype) -> tuple[dict, dict]:
+    ks = jax.random.split(key, 3)
+    p = {"w_gate": dense_init(ks[0], d, f, dtype),
+         "w_up": dense_init(ks[1], d, f, dtype),
+         "w_down": dense_init(ks[2], f, d, dtype)}
+    s = {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+         "w_down": ("mlp", "embed")}
+    return p, s
+
+
+def dense_ffn(p, x):
+    return swiglu(x @ p["w_gate"], x @ p["w_up"]) @ p["w_down"]

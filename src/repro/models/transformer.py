@@ -1,0 +1,364 @@
+"""Unified decoder-only LM covering the five assigned LM architectures.
+
+One config dataclass selects GQA vs MLA attention and dense vs MoE FFN;
+layers are homogeneous and stacked (params carry a leading [L] "layers"
+axis) so the forward pass is a single ``lax.scan`` -- essential to keep
+512-device dry-run compiles tractable at 60 layers.
+
+Exposes pure functions:
+  init_params / abstract_params / param_specs
+  forward_train (logits + aux), make_train_loss
+  prefill (returns KV caches), decode_step (one token)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models.common import dense_init, init_rms, rms_norm, softmax_cross_entropy
+from repro.sharding import shard_act
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    attn: str = "gqa"              # "gqa" | "mla"
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    # MLA dims (deepseek-v2)
+    kv_lora: int = 512
+    q_lora: int = 0                # 0 = no q compression
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # MoE
+    moe_experts: int = 0           # 0 = dense FFN
+    moe_shared: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_norm_topk: bool = True
+    moe_groups: int = 16           # dispatch groups (= data-axis size):
+                                   # sort/gather stay shard-local, see moe.py
+    aux_loss_weight: float = 0.001
+    # system
+    tp: int = 16                   # head padding multiple (model axis size)
+    param_dtype: Any = jnp.bfloat16
+    act_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    max_seq: int = 4096
+    sharded_decode: bool = True    # cache_seq sharding on the model axis
+    blockwise_prefill_from: int = 8192  # t >= this: flash-style prefill
+    prefill_block_k: int = 1024
+    # sequence-parallel residual stream (Megatron-SP): the scan carry /
+    # remat stash is sharded over (batch x model) instead of batch only;
+    # XLA inserts the seq all-gather before attention and the matching
+    # reduce-scatter after each layer.  16x memory on the per-layer
+    # stash for ~1 extra gather per layer (SPerf cell-A it-3).
+    seq_parallel: bool = True
+    # roofline-measurement mode: unroll every lax.scan so XLA
+    # cost_analysis sees the full FLOP/byte/collective counts (while-loop
+    # bodies are otherwise counted once, not x trip count)
+    unroll_scans: bool = False
+
+    def scan_unroll(self, default: int = 1):
+        return self.n_layers if self.unroll_scans else default
+
+    @property
+    def padded_heads(self) -> int:
+        return A.pad_heads(self.n_heads, self.tp)
+
+    @property
+    def padded_vocab(self) -> int:
+        return A.pad_heads(self.vocab, self.tp)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (unpadded; for roofline MODEL_FLOPS)."""
+        d, l, v = self.d_model, self.n_layers, self.vocab
+        if self.attn == "mla":
+            dqk = self.qk_nope_dim + self.qk_rope_dim
+            h = self.n_heads
+            attn = (self.q_lora * (d + h * dqk) if self.q_lora
+                    else d * h * dqk)
+            attn += d * (self.kv_lora + self.qk_rope_dim)
+            attn += self.kv_lora * h * (self.qk_nope_dim + self.v_head_dim)
+            attn += h * self.v_head_dim * d
+        else:
+            attn = d * self.d_head * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.is_moe:
+            ffn = (3 * d * self.moe_d_ff * (self.moe_experts + self.moe_shared)
+                   + d * self.moe_experts)
+        else:
+            ffn = 3 * d * self.d_ff
+        return l * (attn + ffn + 2 * d) + 2 * v * d
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top-k + shared)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, l = self.d_model, self.n_layers
+        full = self.param_count()
+        ffn_all = 3 * d * self.moe_d_ff * self.moe_experts
+        ffn_act = 3 * d * self.moe_d_ff * self.moe_top_k
+        return full - l * (ffn_all - ffn_act)
+
+
+# -------------------------------------------------------------------------
+# Parameter init
+# -------------------------------------------------------------------------
+def _init_layer(key, cfg: TransformerConfig):
+    ks = jax.random.split(key, 4)
+    if cfg.attn == "mla":
+        attn_p, attn_s = A.init_mla(ks[0], cfg)
+    else:
+        attn_p, attn_s = A.init_gqa(ks[0], cfg)
+    if cfg.is_moe:
+        ffn_p, ffn_s = M.init_moe(ks[1], cfg)
+    else:
+        ffn_p, ffn_s = M.init_dense_ffn(ks[1], cfg.d_model, cfg.d_ff,
+                                        cfg.param_dtype)
+    g1, s1 = init_rms(cfg.d_model, cfg.param_dtype)
+    g2, s2 = init_rms(cfg.d_model, cfg.param_dtype)
+    return ({"attn": attn_p, "ffn": ffn_p, "ln1": g1, "ln2": g2},
+            {"attn": attn_s, "ffn": ffn_s, "ln1": s1, "ln2": s2})
+
+
+def init_params(cfg: TransformerConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k_emb, k_lay, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_lay, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg)[0])(layer_keys)
+    params = {
+        "embed": dense_init(k_emb, cfg.padded_vocab, cfg.d_model,
+                            cfg.param_dtype, scale=0.02),
+        "layers": layers,
+        "ln_f": init_rms(cfg.d_model, cfg.param_dtype)[0],
+        "lm_head": dense_init(k_out, cfg.d_model, cfg.padded_vocab,
+                              cfg.param_dtype),
+    }
+    return params
+
+
+def param_specs(cfg: TransformerConfig):
+    # Derive the per-layer spec tree from a tiny structurally-identical
+    # config (avoids building real-size params just to read specs).
+    _, layer_s = _init_layer(jax.random.PRNGKey(0), _tiny_like(cfg))
+    # prepend the stacked "layers" axis to every per-layer leaf
+    layers_spec = jax.tree.map(
+        lambda s: ("layers",) + tuple(s),
+        layer_s,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    return {
+        "embed": ("vocab", "embed"),
+        "layers": layers_spec,
+        "ln_f": (None,),
+        "lm_head": ("embed", "vocab"),
+    }
+
+
+def _tiny_like(cfg: TransformerConfig) -> TransformerConfig:
+    """Tiny config with identical *structure* (for cheap spec derivation)."""
+    return dataclasses.replace(
+        cfg, n_layers=1, d_model=8, n_heads=2, n_kv_heads=1, d_ff=16,
+        vocab=32, d_head=4, kv_lora=8, q_lora=8 if cfg.q_lora else 0,
+        qk_nope_dim=4, qk_rope_dim=4, v_head_dim=4, tp=2,
+        moe_experts=2 if cfg.is_moe else 0,
+        moe_shared=1 if cfg.is_moe else 0,
+        moe_top_k=1 if cfg.is_moe else 0,
+        moe_d_ff=8 if cfg.is_moe else 0, max_seq=16)
+
+
+def abstract_params(cfg: TransformerConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# -------------------------------------------------------------------------
+# Forward passes
+# -------------------------------------------------------------------------
+ACT = ("batch", None, None)   # [b, t, d] activations: batch-sharded
+
+
+def act_spec(cfg: TransformerConfig, t: int):
+    """Residual-stream spec: sequence-parallel when enabled and the
+    sequence divides the model axis (decode t=1 stays batch-only)."""
+    if cfg.seq_parallel and t % cfg.tp == 0:
+        return ("batch", "act_seq", None)
+    return ACT
+
+
+def _layer_fwd(layer_p, x, cfg, positions):
+    spec = act_spec(cfg, x.shape[1])
+    h, _ = (A.mla_train if cfg.attn == "mla" else A.gqa_train)(
+        layer_p["attn"], rms_norm(layer_p["ln1"], x), cfg, positions)
+    x = shard_act(x + h, spec)
+    if cfg.is_moe:
+        f, aux = M.moe_ffn(layer_p["ffn"], rms_norm(layer_p["ln2"], x), cfg)
+    else:
+        f, aux = M.dense_ffn(layer_p["ffn"], rms_norm(layer_p["ln2"], x)), 0.0
+    return shard_act(x + f, spec), aux
+
+
+def forward_train(params, tokens, cfg: TransformerConfig):
+    """tokens int32[b, t] -> (logits [b, t, Vpad], aux loss)."""
+    b, t = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    x = shard_act(x, act_spec(cfg, t))
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    def body(x, layer_p):
+        fn = _layer_fwd
+        if cfg.remat:
+            fn = jax.checkpoint(fn, static_argnums=(2,))
+        x, aux = fn(layer_p, x, cfg, positions)
+        return x, aux
+
+    x, auxes = jax.lax.scan(lambda c, lp: body(c, lp), x, params["layers"],
+                            unroll=cfg.scan_unroll())
+    x = rms_norm(params["ln_f"], x)
+    logits = shard_act(x @ params["lm_head"], ("batch", None, "vocab"))
+    return logits, jnp.sum(auxes)
+
+
+def make_train_loss(cfg: TransformerConfig):
+    def loss_fn(params, batch):
+        logits, aux = forward_train(params, batch["tokens"], cfg)
+        ce = softmax_cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+        return ce + cfg.aux_loss_weight * aux
+    return loss_fn
+
+
+# -------------------------------------------------------------------------
+# Serving: prefill + decode
+# -------------------------------------------------------------------------
+def abstract_cache(cfg: TransformerConfig, batch: int, s_max: int):
+    l, b = cfg.n_layers, batch
+    dt = cfg.act_dtype
+    if cfg.attn == "mla":
+        return {
+            "ckv": jax.ShapeDtypeStruct((l, b, s_max, cfg.kv_lora), dt),
+            "kr": jax.ShapeDtypeStruct((l, b, s_max, cfg.qk_rope_dim), dt),
+            "lengths": jax.ShapeDtypeStruct((b,), jnp.int32),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct(
+            (l, b, s_max, cfg.n_kv_heads, cfg.d_head), dt),
+        "v": jax.ShapeDtypeStruct(
+            (l, b, s_max, cfg.n_kv_heads, cfg.d_head), dt),
+        "lengths": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: TransformerConfig):
+    """Logical shardings for the KV cache (sequence-sharded on decode)."""
+    seq_ax = "cache_seq" if cfg.sharded_decode else None
+    if cfg.attn == "mla":
+        return {"ckv": ("layers", "batch", seq_ax, None),
+                "kr": ("layers", "batch", seq_ax, None),
+                "lengths": ("batch",)}
+    return {"k": ("layers", "batch", seq_ax, "kv_heads", None),
+            "v": ("layers", "batch", seq_ax, "kv_heads", None),
+            "lengths": ("batch",)}
+
+
+def init_cache(cfg: TransformerConfig, batch: int, s_max: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        abstract_cache(cfg, batch, s_max))
+
+
+def prefill(params, tokens, cfg: TransformerConfig, s_max: int):
+    """Full-sequence forward that also materializes the KV cache."""
+    b, t = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_dtype)
+    x = shard_act(x, act_spec(cfg, t))
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    if t >= cfg.blockwise_prefill_from:
+        attn_fn = (A.mla_prefill_blockwise if cfg.attn == "mla"
+                   else A.gqa_prefill_blockwise)
+        attn_fn = functools.partial(attn_fn, block_k=cfg.prefill_block_k)
+    else:
+        attn_fn = A.mla_train if cfg.attn == "mla" else A.gqa_train
+
+    def body(x, layer_p):
+        h, kv = attn_fn(
+            layer_p["attn"], rms_norm(layer_p["ln1"], x), cfg, positions)
+        x = shard_act(x + h, ACT)
+        if cfg.is_moe:
+            f, _ = M.moe_ffn(layer_p["ffn"], rms_norm(layer_p["ln2"], x), cfg)
+        else:
+            f = M.dense_ffn(layer_p["ffn"], rms_norm(layer_p["ln2"], x))
+        return shard_act(x + f, ACT), kv
+
+    x, kvs = jax.lax.scan(body, x, params["layers"],
+                          unroll=cfg.scan_unroll())
+    x = rms_norm(params["ln_f"], x)
+    logits = x[:, -1] @ params["lm_head"]
+
+    pad = s_max - t
+    if cfg.attn == "mla":
+        cache = {"ckv": jnp.pad(kvs[0], ((0, 0), (0, 0), (0, pad), (0, 0))),
+                 "kr": jnp.pad(kvs[1], ((0, 0), (0, 0), (0, pad), (0, 0))),
+                 "lengths": jnp.full((b,), t, jnp.int32)}
+    else:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+        cache = {"k": jnp.pad(kvs[0], widths), "v": jnp.pad(kvs[1], widths),
+                 "lengths": jnp.full((b,), t, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache, token, cfg: TransformerConfig):
+    """One decode step: token int32[b] -> (logits [b, Vpad], new cache)."""
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(cfg.act_dtype)
+    lengths = cache["lengths"]
+
+    if cfg.attn == "mla":
+        carriers = (cache["ckv"], cache["kr"])
+    else:
+        carriers = (cache["k"], cache["v"])
+
+    def body(x, scanned):
+        layer_p, c1, c2 = scanned
+        xin = rms_norm(layer_p["ln1"], x)
+        if cfg.attn == "mla":
+            h, n1, n2 = A.mla_decode(layer_p["attn"], xin, c1, c2, lengths, cfg)
+        else:
+            h, n1, n2 = A.gqa_decode(layer_p["attn"], xin, c1, c2, lengths, cfg)
+        x = shard_act(x + h, ACT)
+        if cfg.is_moe:
+            f, _ = M.moe_ffn(layer_p["ffn"], rms_norm(layer_p["ln2"], x), cfg)
+        else:
+            f = M.dense_ffn(layer_p["ffn"], rms_norm(layer_p["ln2"], x))
+        return shard_act(x + f, ACT), (n1, n2)
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"],) + carriers,
+                                 unroll=cfg.scan_unroll())
+    x = rms_norm(params["ln_f"], x)
+    logits = x[:, 0] @ params["lm_head"]
+    if cfg.attn == "mla":
+        new_cache = {"ckv": new_caches[0], "kr": new_caches[1],
+                     "lengths": lengths + 1}
+    else:
+        new_cache = {"k": new_caches[0], "v": new_caches[1],
+                     "lengths": lengths + 1}
+    return logits, new_cache

@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, checkpointing, fault-tolerant loop."""
+
+from repro.train import checkpoint
+from repro.train import loop
+from repro.train import optimizer

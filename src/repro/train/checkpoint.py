@@ -1,0 +1,132 @@
+"""Checkpointing: atomic, resumable, async-capable pytree snapshots.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        manifest.json        # treedef, shapes, dtypes, user metadata
+        arrays.npz           # flat leaves keyed by index
+    <dir>/LATEST             # text file: last *committed* step
+
+Write protocol: serialize to ``step_X.tmp`` then ``os.replace`` --
+a crashed writer can never corrupt the committed checkpoint, which is
+the property the fault-tolerant loop relies on.  ``save_async`` hands
+host-transferred arrays to a background thread so the device step is
+not blocked (the standard large-cluster pattern).
+
+Arrays are stored *unsharded logical* -- restore reshards onto whatever
+mesh the new job has (elastic restart across different device counts).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, step: int, tree: Any, metadata: dict | None = None):
+    """Blocking atomic save."""
+    leaves, treedef = _flatten(tree)
+    host = [np.asarray(x) for x in leaves]
+    final = os.path.join(path, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{str(i): a for i, a in enumerate(host)})
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "shapes": [list(a.shape) for a in host],
+        "dtypes": [str(a.dtype) for a in host],
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    # commit pointer (atomic via rename)
+    ptr_tmp = os.path.join(path, "LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(str(step))
+    os.replace(ptr_tmp, os.path.join(path, "LATEST"))
+
+
+class AsyncSaver:
+    """One in-flight async save; joins the previous one before starting."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, path: str, step: int, tree: Any,
+             metadata: dict | None = None):
+        self.wait()
+        # device->host transfer happens on the caller thread (cheap,
+        # ordered); serialization happens in the background.
+        leaves, treedef = _flatten(tree)
+        host = [np.asarray(x) for x in leaves]
+        host_tree = jax.tree.unflatten(treedef, host)
+        self._thread = threading.Thread(
+            target=save, args=(path, step, host_tree, metadata), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(path: str) -> int | None:
+    ptr = os.path.join(path, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        return int(f.read().strip())
+
+
+def restore(path: str, tree_like: Any, step: int | None = None):
+    """Restore into the structure of ``tree_like`` (shapes must match).
+
+    Returns (tree, step, metadata); raises FileNotFoundError if none.
+    """
+    step = step if step is not None else latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint under {path}")
+    d = os.path.join(path, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    leaves = [data[str(i)] for i in range(len(data.files))]
+    ref_leaves, treedef = _flatten(tree_like)
+    if len(ref_leaves) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, expected "
+            f"{len(ref_leaves)}")
+    out = []
+    for ref, arr in zip(ref_leaves, leaves):
+        if tuple(ref.shape) != tuple(arr.shape):
+            raise ValueError(f"shape mismatch {ref.shape} vs {arr.shape}")
+        out.append(jax.device_put(arr.astype(ref.dtype))
+                   if hasattr(ref, "dtype") else arr)
+    return jax.tree.unflatten(treedef, out), step, manifest["metadata"]
+
+
+def gc_old(path: str, keep: int = 3):
+    """Delete all but the newest ``keep`` committed checkpoints."""
+    if not os.path.isdir(path):
+        return
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(path)
+        if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(path, f"step_{s:09d}"), ignore_errors=True)

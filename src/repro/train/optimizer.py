@@ -1,0 +1,130 @@
+"""AdamW with production knobs (self-contained; no optax dependency).
+
+* **ZeRO-style state sharding**: moment tensors inherit the parameter
+  sharding (FSDP rules shard the embed dim on "data"), so optimizer
+  state per device is param_bytes / (fsdp x tp) x 2 -- the launch layer
+  passes the same logical specs used for params.
+* **Gradient clipping** by global norm.
+* **Gradient compression** (optional): error-feedback int8 quantization
+  applied before the cross-pod reduction -- the classic 1-bit-Adam-style
+  trick for slow inter-pod links [Seide et al. 2014; Tang et al.
+  arXiv:2102.02888].  The residual is carried in the optimizer state.
+* **Schedules**: linear warmup + cosine decay.
+
+All functions are pure pytree -> pytree (jit/pjit friendly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    compress: bool = False       # error-feedback int8 gradient compression
+
+
+class OptState(NamedTuple):
+    step: jax.Array     # int32
+    mu: Any             # first moments (pytree like params)
+    nu: Any             # second moments
+    err: Any            # compression residual (or None-like zeros tree)
+
+
+def init(params, cfg: AdamWConfig) -> OptState:
+    zeros = lambda t: jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), t)
+    err = zeros(params) if cfg.compress else jax.tree.map(
+        lambda p: jnp.zeros((), jnp.float32), params)
+    return OptState(step=jnp.int32(0), mu=zeros(params), nu=zeros(params),
+                    err=err)
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+# -------------------------------------------------------------------------
+# Error-feedback int8 compression (per-tensor scale).
+# -------------------------------------------------------------------------
+def _compress_decompress(g, err):
+    """Quantize (g + err) to int8 with per-tensor absmax scale; return the
+    dequantized value and the new residual.  In a multi-pod deployment the
+    int8 payload is what crosses the pod axis; the roundtrip here is the
+    mathematically identical single-program formulation."""
+    g32 = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, g32 - deq
+
+
+def apply(params, grads, state: OptState, cfg: AdamWConfig):
+    """One AdamW update. Returns (new_params, new_state, stats)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * clip, grads)
+
+    if cfg.compress:
+        pairs = jax.tree.map(_compress_decompress, grads, state.err)
+        grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        err = jax.tree.map(lambda p: p[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        err = state.err
+
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    mu = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[2], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    new_state = OptState(step=step, mu=mu, nu=nu, err=err)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def state_specs(param_specs, compress: bool = False):
+    """Logical sharding specs for OptState, mirroring the param specs."""
+    err = param_specs if compress else jax.tree.map(
+        lambda _: (), param_specs,
+        is_leaf=lambda x: x is None or isinstance(x, tuple))
+    return OptState(step=(), mu=param_specs, nu=param_specs, err=err)

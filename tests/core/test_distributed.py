@@ -1,0 +1,76 @@
+"""Multi-device correctness of the shard_map DSPC paths.
+
+Needs >1 XLA host device, which must be configured before jax initializes;
+we therefore run the actual checks in a subprocess with XLA_FLAGS set.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.core import build_index, from_edges
+    from repro.core.distributed import (
+        make_distributed_builder, make_sharded_query, pad_graph_for)
+    from repro.core.labels import to_ref
+
+    EDGES = [
+        (0, 1), (0, 2), (0, 3), (0, 8), (0, 11),
+        (1, 2), (1, 5), (1, 6),
+        (2, 3), (2, 5),
+        (3, 7), (3, 8),
+        (4, 5), (4, 7), (4, 9),
+        (6, 10), (9, 10),
+    ]
+
+    devices = np.asarray(jax.devices()).reshape(2, 4)
+    mesh = Mesh(devices, ("data", "model"))
+
+    g = from_edges(12, EDGES)
+    ref_idx = build_index(g, l_cap=8)
+
+    g_pad = pad_graph_for(g, 4)
+    with mesh:
+        build = make_distributed_builder(mesh, edge_axis="model")
+        idx = build(g_pad, 8)
+        assert int(idx.overflow) == 0
+        a, b = to_ref(idx), to_ref(ref_idx)
+        for v in range(12):
+            assert a.labels[v] == b.labels[v], (v, a.labels[v], b.labels[v])
+
+        query = make_sharded_query(mesh, batch_axes=("data",))
+        s = jnp.arange(12, dtype=jnp.int32).repeat(12)[:144]
+        t = jnp.tile(jnp.arange(12, dtype=jnp.int32), 12)[:144]
+        # pad batch to a multiple of the data axis (2)
+        d_sh, c_sh = query(idx, s, t)
+        from repro.core.query import batched_query
+        d, c = batched_query(ref_idx, s, t)
+        assert (np.asarray(d_sh) == np.asarray(d)).all()
+        assert (np.asarray(c_sh) == np.asarray(c)).all()
+    print("DISTRIBUTED_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_distributed_matches_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+        timeout=600,
+    )
+    assert "DISTRIBUTED_OK" in proc.stdout, proc.stderr[-3000:]

@@ -1,0 +1,169 @@
+"""JAX core vs the paper-faithful reference: exact index equality.
+
+The JAX algorithms are bulk/level-synchronous reformulations of the exact
+same algorithms, so after every operation the *entire label matrix* must
+match the reference index (same hubs, same order, same dists and counts).
+"""
+
+import random
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DynamicSPC,
+    INF,
+    batched_query,
+    build_index,
+    from_edges,
+    plain_spc_bfs,
+)
+from repro.core import labels as L
+from repro.core import refimpl as R
+from repro.core.graph import to_ref as graph_to_ref
+from repro.core.labels import to_ref as index_to_ref
+
+from tests.core.test_refimpl import PAPER_EDGES, TABLE_2, paper_graph, random_graph
+
+
+def assert_index_equal(jax_idx, ref_idx, n):
+    got = index_to_ref(jax_idx)
+    for v in range(n):
+        assert got.labels[v] == ref_idx.labels[v], (
+            f"L(v{v}): jax={got.labels[v]} ref={ref_idx.labels[v]}")
+
+
+def make_pair(n, edges, l_cap=16):
+    g = from_edges(n, edges)
+    ref_g = R.RefGraph(n, edges)
+    return g, ref_g
+
+
+# ---------------------------------------------------------------------------
+class TestBFS:
+    @pytest.mark.parametrize("seed", range(3))
+    def test_plain_bfs_vs_oracle(self, seed):
+        ref_g = random_graph(30, 55, seed)
+        g = from_edges(30, ref_g.edge_list())
+        for s in (0, 7, 29):
+            res = plain_spc_bfs(g, s)
+            dist, cnt = R.bfs_spc(ref_g, s)
+            got_d = np.asarray(res.dist[:30])
+            got_d = np.where(got_d >= int(INF), R.INF, got_d)
+            assert (got_d == dist).all()
+            assert (np.asarray(res.cnt[:30]) == cnt).all()
+
+
+class TestConstruction:
+    def test_paper_graph_table_2(self):
+        g = from_edges(12, PAPER_EDGES)
+        idx = build_index(g, l_cap=8)
+        assert int(idx.overflow) == 0
+        got = index_to_ref(idx)
+        for v, expected in TABLE_2.items():
+            assert got.labels[v] == expected, f"L(v{v})"
+
+    def test_overflow_reported(self):
+        g = from_edges(12, PAPER_EDGES)
+        idx = build_index(g, l_cap=3)
+        assert int(idx.overflow) > 0
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_random_match(self, seed):
+        ref_g = random_graph(30, 60, seed)
+        g = from_edges(30, ref_g.edge_list())
+        idx = build_index(g, l_cap=32)
+        assert int(idx.overflow) == 0
+        assert_index_equal(idx, R.hp_spc(ref_g), 30)
+
+
+class TestQueries:
+    def test_batched_query_matches_oracle(self):
+        g = from_edges(12, PAPER_EDGES)
+        idx = build_index(g, l_cap=8)
+        pairs = [(s, t) for s in range(12) for t in range(12)]
+        s = jnp.asarray([p[0] for p in pairs])
+        t = jnp.asarray([p[1] for p in pairs])
+        d, c = batched_query(idx, s, t)
+        ref_g = paper_graph()
+        for k, (ss, tt) in enumerate(pairs):
+            dist, cnt = R.bfs_spc(ref_g, ss)
+            d_true = int(dist[tt]) if dist[tt] < R.INF else int(INF)
+            assert int(d[k]) == d_true, (ss, tt)
+            assert int(c[k]) == int(cnt[tt]), (ss, tt)
+
+
+# ---------------------------------------------------------------------------
+class TestDynamicUpdates:
+    def test_inc_figure_3(self):
+        spc = DynamicSPC(12, PAPER_EDGES, l_cap=8)
+        ref_g = paper_graph()
+        ref_idx = R.hp_spc(ref_g)
+        spc.insert_edge(3, 9)
+        R.inc_spc(ref_g, ref_idx, 3, 9)
+        assert_index_equal(spc.index, ref_idx, 12)
+
+    def test_dec_figure_6(self):
+        spc = DynamicSPC(12, PAPER_EDGES, l_cap=8)
+        ref_g = paper_graph()
+        ref_idx = R.hp_spc(ref_g)
+        spc.delete_edge(1, 2)
+        R.dec_spc(ref_g, ref_idx, 1, 2)
+        assert_index_equal(spc.index, ref_idx, 12)
+
+    def test_isolated_fast_path(self):
+        spc = DynamicSPC(12, PAPER_EDGES, l_cap=8)
+        spc.delete_edge(0, 11)
+        assert spc.stats.isolated_fast_path == 1
+        assert spc.query(0, 11) == (int(INF), 0)
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_mixed_stream_exact(self, seed):
+        rng = random.Random(500 + seed)
+        n = 20
+        ref_g = random_graph(n, 30, seed)
+        spc = DynamicSPC(n, ref_g.edge_list(), l_cap=32)
+        ref_idx = R.hp_spc(ref_g)
+        for step in range(24):
+            if rng.random() < 0.6:
+                for _ in range(200):
+                    a, b = rng.randrange(n), rng.randrange(n)
+                    if a != b and not ref_g.has_edge(a, b):
+                        spc.insert_edge(a, b)
+                        R.inc_spc(ref_g, ref_idx, a, b)
+                        break
+            else:
+                edges = ref_g.edge_list()
+                if edges:
+                    a, b = edges[rng.randrange(len(edges))]
+                    spc.delete_edge(a, b)
+                    R.dec_spc(ref_g, ref_idx, a, b)
+            # Note: the isolated fast path and DecSPC produce identical
+            # indexes, so exact equality holds throughout the stream.
+            assert_index_equal(spc.index, ref_idx, n)
+        R.check_espc(ref_g, index_to_ref(spc.index))
+
+    def test_label_capacity_regrowth(self):
+        # Tiny capacity forces overflow-retry during inserts.
+        spc = DynamicSPC(12, PAPER_EDGES, l_cap=8)
+        spc.index = L.repad(spc.index, 8)
+        spc.insert_edge(3, 9)
+        spc.insert_edge(8, 10)
+        ref_g = paper_graph()
+        ref_idx = R.hp_spc(ref_g)
+        R.inc_spc(ref_g, ref_idx, 3, 9)
+        R.inc_spc(ref_g, ref_idx, 8, 10)
+        assert_index_equal(spc.index, ref_idx, 12)
+
+    def test_vertex_lifecycle(self):
+        spc = DynamicSPC(12, PAPER_EDGES, l_cap=8)
+        v = spc.insert_vertex()
+        assert v == 12
+        spc.insert_edge(4, v)
+        spc.insert_edge(0, v)
+        assert spc.query(0, v)[0] == 1
+        spc.delete_vertex(v)
+        assert spc.query(0, v) == (int(INF), 0)
+        ref = graph_to_ref(spc.graph)
+        R.check_espc(ref, index_to_ref(spc.index))

@@ -1,0 +1,143 @@
+"""Property-based tests (hypothesis) on the system's core invariants.
+
+The central invariant is ESPC (Exact Shortest Path Covering): after ANY
+sequence of updates, the index answers every (dist, count) query exactly
+like online BFS counting.  We drive both the paper-faithful reference
+and the JAX implementation through random graphs + random update streams
+and check the invariant plus cross-implementation agreement.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_index, from_edges
+from repro.core import refimpl as R
+from repro.core.decremental import dec_spc
+from repro.core.incremental import inc_spc
+from repro.core.labels import to_ref
+from repro.core.query import batched_query
+
+
+# --------------------------------------------------------------------------
+# strategies
+# --------------------------------------------------------------------------
+@st.composite
+def graph_and_stream(draw, max_n=14, max_updates=6):
+    n = draw(st.integers(4, max_n))
+    possible = [(a, b) for a in range(n) for b in range(a + 1, n)]
+    idxs = draw(st.lists(st.integers(0, len(possible) - 1), min_size=3,
+                         max_size=min(3 * n, len(possible)), unique=True))
+    edges = [possible[i] for i in idxs]
+    ops = draw(st.lists(st.tuples(st.booleans(),
+                                  st.integers(0, len(possible) - 1)),
+                        min_size=1, max_size=max_updates))
+    return n, edges, [(ins, possible[i]) for ins, i in ops]
+
+
+# --------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(graph_and_stream())
+def test_refimpl_espc_under_stream(data):
+    n, edges, ops = data
+    g = R.RefGraph(n, edges)
+    idx = R.hp_spc(g)
+    for insert, (a, b) in ops:
+        if insert and not g.has_edge(a, b):
+            R.inc_spc(g, idx, a, b)
+        elif not insert and g.has_edge(a, b):
+            R.dec_spc(g, idx, a, b)
+    R.check_espc(g, idx)
+
+
+@settings(max_examples=12, deadline=None)
+@given(graph_and_stream(max_n=10, max_updates=4))
+def test_jax_agrees_with_refimpl_under_stream(data):
+    n, edges, ops = data
+    # reference
+    rg = R.RefGraph(n, edges)
+    ridx = R.hp_spc(rg)
+    # jax (generous capacities so no overflow-retry in the test)
+    g = from_edges(n, edges, cap_e=4 * (len(edges) + len(ops) + 4))
+    idx = build_index(g, l_cap=n + 2)
+    assert int(idx.overflow) == 0
+    for insert, (a, b) in ops:
+        if insert and not rg.has_edge(a, b):
+            R.inc_spc(rg, ridx, a, b)
+            g, idx = inc_spc(g, idx, a, b)
+        elif not insert and rg.has_edge(a, b):
+            lo, hi = (a, b) if a < b else (b, a)
+            if rg.degree(hi) == 1:
+                continue  # isolated fast path lives in the driver
+            R.dec_spc(rg, ridx, a, b)
+            g, idx = dec_spc(g, idx, a, b)
+        assert int(idx.overflow) == 0
+    # full pairwise agreement through the query path
+    ss, tt = np.meshgrid(np.arange(n), np.arange(n))
+    d_j, c_j = batched_query(idx, jnp.asarray(ss.ravel()),
+                             jnp.asarray(tt.ravel()))
+    for k, (s, t) in enumerate(zip(ss.ravel(), tt.ravel())):
+        d_r, c_r = ridx.query(int(s), int(t))
+        if c_r == 0:  # disconnected: INF sentinels differ by module
+            assert int(c_j[k]) == 0 and int(d_j[k]) >= (1 << 28), (s, t)
+        else:
+            assert (int(d_j[k]), int(c_j[k])) == (d_r, c_r), (s, t)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 16), st.integers(0, 10_000))
+def test_query_symmetry_and_identity(n, seed):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(n, 3 * n))
+    edges = set()
+    while len(edges) < m:
+        a, b = rng.integers(0, n, 2)
+        if a != b:
+            edges.add((min(int(a), int(b)), max(int(a), int(b))))
+        m -= 0 if len(edges) < m else 1
+        if len(edges) >= n * (n - 1) // 2:
+            break
+    g = from_edges(n, sorted(edges))
+    idx = build_index(g, l_cap=n + 2)
+    ref = to_ref(idx)
+    for _ in range(10):
+        s, t = rng.integers(0, n, 2)
+        dst, cst = ref.query(int(s), int(t))
+        dts, cts = ref.query(int(t), int(s))
+        assert (dst, cst) == (dts, cts)        # symmetry
+    for v in range(n):
+        assert ref.query(v, v) == (0, 1)       # identity
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(5, 12), st.integers(0, 10_000))
+def test_counts_match_path_enumeration(n, seed):
+    """spc(s,t) equals brute-force enumeration of shortest paths."""
+    import itertools
+    rng = np.random.default_rng(seed)
+    edges = set()
+    for _ in range(2 * n):
+        a, b = rng.integers(0, n, 2)
+        if a != b:
+            edges.add((min(int(a), int(b)), max(int(a), int(b))))
+    g = R.RefGraph(n, sorted(edges))
+    idx = R.hp_spc(g)
+    s, t = int(rng.integers(0, n)), int(rng.integers(0, n))
+    d_idx, c_idx = idx.query(s, t)
+    # brute force BFS enumeration of all shortest paths
+    dist, _ = R.bfs_spc(g, s)
+    if dist[t] >= R.INF:
+        assert c_idx == 0
+        return
+    target_d = int(dist[t])
+    count = 0
+    frontier = [[s]]
+    for _ in range(target_d):
+        nxt = []
+        for path in frontier:
+            for w in g.adj[path[-1]]:
+                if dist[w] == len(path):
+                    nxt.append(path + [w])
+        frontier = nxt
+    count = sum(1 for p in frontier if p[-1] == t)
+    assert (int(d_idx), int(c_idx)) == (target_d, count)

@@ -1,0 +1,236 @@
+"""Reference-implementation tests anchored on the paper's worked examples.
+
+The graph below is Figure 2 of the paper; Table 2 gives its full SPC-Index
+under the ordering v0 <= v1 <= ... <= v11 (ids already equal ranks).
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.refimpl import (
+    INF,
+    RefGraph,
+    bfs_spc,
+    bibfs_spc,
+    check_espc,
+    dec_spc,
+    delete_vertex,
+    hp_spc,
+    inc_spc,
+    insert_vertex,
+    srr_sets,
+)
+
+PAPER_EDGES = [
+    (0, 1), (0, 2), (0, 3), (0, 8), (0, 11),
+    (1, 2), (1, 5), (1, 6),
+    (2, 3), (2, 5),
+    (3, 7), (3, 8),
+    (4, 5), (4, 7), (4, 9),
+    (6, 10), (9, 10),
+]
+
+# Table 2, transcribed: v -> sorted [(hub, dist, count)].
+TABLE_2 = {
+    0: [(0, 0, 1)],
+    1: [(0, 1, 1), (1, 0, 1)],
+    2: [(0, 1, 1), (1, 1, 1), (2, 0, 1)],
+    3: [(0, 1, 1), (1, 2, 1), (2, 1, 1), (3, 0, 1)],
+    4: [(0, 3, 3), (1, 2, 1), (2, 2, 1), (3, 2, 1), (4, 0, 1)],
+    5: [(0, 2, 2), (1, 1, 1), (2, 1, 1), (4, 1, 1), (5, 0, 1)],
+    6: [(0, 2, 1), (1, 1, 1), (4, 3, 1), (6, 0, 1)],
+    7: [(0, 2, 1), (1, 3, 2), (2, 2, 1), (3, 1, 1), (4, 1, 1), (7, 0, 1)],
+    8: [(0, 1, 1), (2, 2, 1), (3, 1, 1), (8, 0, 1)],
+    9: [(0, 4, 4), (1, 3, 2), (2, 3, 1), (3, 3, 1), (4, 1, 1), (6, 2, 1),
+        (9, 0, 1)],
+    10: [(0, 3, 1), (1, 2, 1), (3, 4, 1), (4, 2, 1), (6, 1, 1), (9, 1, 1),
+         (10, 0, 1)],
+    11: [(0, 1, 1), (11, 0, 1)],
+}
+
+
+def paper_graph() -> RefGraph:
+    return RefGraph(12, PAPER_EDGES)
+
+
+def random_graph(n: int, m: int, seed: int) -> RefGraph:
+    rng = random.Random(seed)
+    g = RefGraph(n)
+    edges = set()
+    while len(edges) < m:
+        a, b = rng.randrange(n), rng.randrange(n)
+        if a != b and (min(a, b), max(a, b)) not in edges:
+            edges.add((min(a, b), max(a, b)))
+            g.add_edge(a, b)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Construction
+# ---------------------------------------------------------------------------
+class TestConstruction:
+    def test_table_2_exact(self):
+        idx = hp_spc(paper_graph())
+        for v, expected in TABLE_2.items():
+            assert idx.labels[v] == expected, f"L(v{v}) mismatch"
+
+    def test_example_2_1_query(self):
+        idx = hp_spc(paper_graph())
+        assert idx.query(4, 6) == (3, 2)
+
+    def test_query_all_pairs_vs_oracle(self):
+        g = paper_graph()
+        check_espc(g, hp_spc(g))
+
+    def test_disconnected_query(self):
+        g = RefGraph(4, [(0, 1), (2, 3)])
+        idx = hp_spc(g)
+        assert idx.query(0, 2) == (INF, 0)
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_random_graphs(self, seed):
+        g = random_graph(30, 60, seed)
+        check_espc(g, hp_spc(g))
+
+
+# ---------------------------------------------------------------------------
+# Online baselines agree with each other
+# ---------------------------------------------------------------------------
+class TestBaselines:
+    @pytest.mark.parametrize("seed", range(3))
+    def test_bibfs_vs_bfs(self, seed):
+        g = random_graph(40, 80, seed)
+        for s in range(0, 40, 7):
+            dist, cnt = bfs_spc(g, s)
+            for t in range(40):
+                d, c = bibfs_spc(g, s, t)
+                d_true = int(dist[t]) if dist[t] < INF else INF
+                assert (d, c) == (d_true, int(cnt[t])), (s, t)
+
+    def test_bibfs_paper_example(self):
+        g = paper_graph()
+        assert bibfs_spc(g, 4, 6) == (3, 2)
+        assert bibfs_spc(g, 0, 9) == (4, 4)
+
+
+# ---------------------------------------------------------------------------
+# IncSPC: the Figure 3 worked example (insert (v3, v9))
+# ---------------------------------------------------------------------------
+class TestIncSPC:
+    def test_figure_3_labels(self):
+        g = paper_graph()
+        idx = hp_spc(g)
+        inc_spc(g, idx, 3, 9)
+        # Hub v0 updates (Figure 3(d), modulo the paper's v0/v1 typos):
+        assert idx.get(9, 0) == (0, 2, 1)
+        assert idx.get(4, 0) == (0, 3, 4)
+        assert idx.get(10, 0) == (0, 3, 2)
+        # Hub v1: v9's counting renewed.
+        assert idx.get(9, 1) == (1, 3, 3)
+        # Hub v2: renewed at v9, inserted at v10.
+        assert idx.get(9, 2) == (2, 2, 1)
+        assert idx.get(10, 2) == (2, 3, 1)
+
+    def test_figure_3_full_espc(self):
+        g = paper_graph()
+        idx = hp_spc(g)
+        inc_spc(g, idx, 3, 9)
+        check_espc(g, idx)
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_random_insert_stream(self, seed):
+        rng = random.Random(1000 + seed)
+        g = random_graph(25, 40, seed)
+        idx = hp_spc(g)
+        for _ in range(15):
+            while True:
+                a, b = rng.randrange(25), rng.randrange(25)
+                if a != b and not g.has_edge(a, b):
+                    break
+            inc_spc(g, idx, a, b)
+        check_espc(g, idx)
+
+    def test_vertex_insertion(self):
+        g = paper_graph()
+        idx = hp_spc(g)
+        v = insert_vertex(g, idx)
+        assert v == 12
+        assert idx.query(0, v) == (INF, 0)
+        inc_spc(g, idx, 4, v)
+        inc_spc(g, idx, 10, v)
+        check_espc(g, idx)
+
+
+# ---------------------------------------------------------------------------
+# DecSPC: the Figure 6 worked example (delete (v1, v2))
+# ---------------------------------------------------------------------------
+class TestDecSPC:
+    def test_example_3_13_sets(self):
+        g = paper_graph()
+        idx = hp_spc(g)
+        sr_a, sr_b, r_a, r_b = srr_sets(g, idx, 1, 2)
+        assert sr_a == {1, 6, 10}
+        assert sr_b == {2}
+        assert r_a == set()
+        assert r_b == {3, 7}
+
+    def test_figure_6_labels(self):
+        g = paper_graph()
+        idx = hp_spc(g)
+        dec_spc(g, idx, 1, 2)
+        assert idx.get(2, 1) == (1, 2, 1)     # renewed: v1-v5-v2
+        assert idx.get(3, 1) is None          # removed (dominated via v0)
+        assert idx.get(7, 1) == (1, 3, 1)     # one path lost
+        assert idx.get(10, 2) == (2, 4, 1)    # inserted: v2-v5-v4-v9-v10
+        check_espc(g, idx)
+
+    def test_isolated_vertex_optimization(self):
+        g = paper_graph()
+        idx = hp_spc(g)
+        dec_spc(g, idx, 0, 11)  # deg(v11) = 1, lower rank than v0
+        assert idx.labels[11] == [(11, 0, 1)]
+        check_espc(g, idx)
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_random_delete_stream(self, seed):
+        rng = random.Random(2000 + seed)
+        g = random_graph(25, 50, seed)
+        idx = hp_spc(g)
+        for _ in range(12):
+            edges = g.edge_list()
+            a, b = edges[rng.randrange(len(edges))]
+            dec_spc(g, idx, a, b)
+        check_espc(g, idx)
+
+    def test_vertex_deletion(self):
+        g = paper_graph()
+        idx = hp_spc(g)
+        delete_vertex(g, idx, 4)
+        assert g.degree(4) == 0
+        check_espc(g, idx)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid streams (the Section 4.4 scenario, scaled down)
+# ---------------------------------------------------------------------------
+class TestHybridStream:
+    @pytest.mark.parametrize("seed", range(4))
+    def test_mixed_updates(self, seed):
+        rng = random.Random(3000 + seed)
+        g = random_graph(24, 40, seed)
+        idx = hp_spc(g)
+        for step in range(30):
+            if rng.random() < 0.7:
+                for _ in range(100):
+                    a, b = rng.randrange(g.n), rng.randrange(g.n)
+                    if a != b and not g.has_edge(a, b):
+                        inc_spc(g, idx, a, b)
+                        break
+            else:
+                edges = g.edge_list()
+                if edges:
+                    a, b = edges[rng.randrange(len(edges))]
+                    dec_spc(g, idx, a, b)
+        check_espc(g, idx)

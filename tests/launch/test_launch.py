@@ -1,0 +1,79 @@
+"""Launch-layer tests: bundles, sharding resolution, dry-run smoke
+(subprocess — dryrun.py sets XLA_FLAGS at import), ring equivalence."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import pytest
+
+from repro.configs import ARCH_IDS, get
+from repro.launch.steps import all_cells, make_bundle
+from repro.sharding import FSDP_TP, drop_pod, resolve, resolve_tree
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    return env
+
+
+def test_all_cells_enumeration():
+    cells = all_cells()
+    assert len(cells) == 44  # 10 assigned archs x 4 + dspc x 4
+    assert len({a for a, _ in cells}) == 11
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_bundles_build_for_all_shapes(arch):
+    """Full-size bundles build (abstract only — no allocation)."""
+    for shape in get(arch).shapes:
+        b = make_bundle(arch, shape)
+        assert b.abstract_args and b.model_flops > 0
+        # spec tree must zip with the abstract tree
+        assert len(b.arg_specs) == len(b.abstract_args)
+
+
+def test_rules_drop_pod():
+    single = drop_pod(FSDP_TP)
+    assert single["batch"] == "data"
+    assert FSDP_TP["batch"] == ("pod", "data")
+
+
+def test_resolve_ignores_unknown_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ns = resolve(("batch", None, "vocab"), FSDP_TP, mesh)
+    assert ns.spec == jax.sharding.PartitionSpec("data", None, "model")
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_subprocess():
+    with tempfile.TemporaryDirectory() as tmp:
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", "dien",
+             "--shape", "serve_p99", "--out", tmp],
+            capture_output=True, text=True, env=_env(), cwd=REPO,
+            timeout=900)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        with open(os.path.join(tmp, "pod16x16", "dien__serve_p99.json")) as f:
+            rec = json.load(f)
+        assert rec["status"] == "ok"
+        assert rec["chips"] == 256
+        assert rec["hlo_flops_per_device"] > 0
+
+
+@pytest.mark.slow
+def test_ring_equals_local_subprocess():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "launch",
+                                      "ring_check.py")],
+        capture_output=True, text=True, env=_env(), cwd=REPO, timeout=900)
+    assert proc.returncode == 0, (proc.stdout + proc.stderr)[-2000:]
+    assert "RING_CHECK_OK" in proc.stdout

@@ -1,0 +1,175 @@
+"""GNN family tests: irreps math, equivariance, sampler, aggregators."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.gnn import egnn, equiformer_v2 as eqv2, irreps as IR, nequip, pna
+from repro.models.gnn.graph import from_numpy
+from repro.models.gnn.sampler import (CSRGraph, NeighborSampler,
+                                      sample_block_caps, synthetic_csr)
+
+
+def rand_rot(seed):
+    A = np.random.default_rng(seed).normal(size=(3, 3))
+    Q, R = np.linalg.qr(A)
+    Q = Q * np.sign(np.diag(R))
+    if np.linalg.det(Q) < 0:
+        Q[:, 0] *= -1
+    return Q
+
+
+def small_batch(seed=0, n=16, e=40, f=8, no_self_loops=True):
+    rng = np.random.default_rng(seed)
+    snd = rng.integers(0, n, e).astype(np.int32)
+    rcv = rng.integers(0, n, e).astype(np.int32)
+    if no_self_loops:
+        keep = snd != rcv
+        snd, rcv = snd[keep], rcv[keep]
+    feat = rng.normal(size=(n, f)).astype(np.float32)
+    pos = rng.normal(size=(n, 3)).astype(np.float32)
+    return feat, pos, snd, rcv
+
+
+# --------------------------------------------------------------------------
+class TestIrreps:
+    @pytest.mark.parametrize("l_max", [1, 2, 4, 6])
+    def test_sh_wigner_consistency(self, l_max):
+        rng = np.random.default_rng(0)
+        v = rng.normal(size=(6, 3))
+        v /= np.linalg.norm(v, axis=-1, keepdims=True)
+        R = rand_rot(3)
+        Y = IR.sph_harm(l_max, jnp.asarray(v))
+        Yr = IR.sph_harm(l_max, jnp.asarray(v @ R.T))
+        Ds = IR.wigner_d(l_max, jnp.asarray(R))
+        for l in range(l_max + 1):
+            lhs = np.asarray(Yr[..., IR.l_slice(l)])
+            rhs = np.einsum("ij,nj->ni", np.asarray(Ds[l]),
+                            np.asarray(Y[..., IR.l_slice(l)]))
+            np.testing.assert_allclose(lhs, rhs, atol=1e-9)
+
+    def test_wigner_orthogonality(self):
+        R = rand_rot(5)
+        for l, D in enumerate(IR.wigner_d(4, jnp.asarray(R))):
+            D = np.asarray(D)
+            np.testing.assert_allclose(D @ D.T, np.eye(2 * l + 1),
+                                       atol=1e-10)
+
+    @pytest.mark.parametrize("path", [(1, 1, 0), (1, 1, 2), (2, 1, 1),
+                                      (2, 2, 2), (2, 2, 4)])
+    def test_cg_equivariance(self, path):
+        l1, l2, l3 = path
+        rng = np.random.default_rng(1)
+        w = IR.cg_real(l1, l2, l3)
+        a = rng.normal(size=(2 * l1 + 1,))
+        b = rng.normal(size=(2 * l2 + 1,))
+        R = rand_rot(2)
+        Ds = IR.wigner_d(max(path), jnp.asarray(R))
+        lhs = np.einsum("ijk,i,j->k", w, np.asarray(Ds[l1]) @ a,
+                        np.asarray(Ds[l2]) @ b)
+        rhs = np.asarray(Ds[l3]) @ np.einsum("ijk,i,j->k", w, a, b)
+        np.testing.assert_allclose(lhs, rhs, atol=1e-10)
+
+    def test_rot_to_polar(self):
+        rng = np.random.default_rng(2)
+        v = rng.normal(size=(20, 3))
+        R = np.asarray(IR.rot_to_polar(jnp.asarray(v)))
+        out = np.einsum("nij,nj->ni", R,
+                        v / np.linalg.norm(v, axis=-1, keepdims=True))
+        np.testing.assert_allclose(out, np.tile([0, 0, 1.0], (20, 1)),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.linalg.det(R), 1.0, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+class TestEquivariance:
+    def test_egnn(self):
+        feat, pos, snd, rcv = small_batch()
+        cfg = egnn.EGNNConfig(d_in=feat.shape[1], n_layers=3, d_hidden=16)
+        p = egnn.init_params(cfg, jax.random.PRNGKey(0))
+        R = rand_rot(7).astype(np.float32)
+        t = np.asarray([0.5, -1.0, 2.0], np.float32)
+        b1 = from_numpy(feat, snd, rcv, pos=pos)
+        b2 = from_numpy(feat, snd, rcv, pos=pos @ R.T + t)
+        g1, _, x1 = egnn.forward(p, b1, cfg)
+        g2, _, x2 = egnn.forward(p, b2, cfg)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=2e-4, atol=1e-4)
+        n = b1.n_node
+        np.testing.assert_allclose(
+            np.asarray(x2[:n]), np.asarray(x1[:n]) @ R.T + t,
+            rtol=2e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("model,cfg", [
+        ("nequip", nequip.NequIPConfig(d_in=8, n_layers=2, d_hidden=8)),
+        ("eqv2", eqv2.EquiformerV2Config(d_in=8, n_layers=2, d_hidden=8,
+                                         l_max=3, m_max=2, n_heads=2,
+                                         n_rbf=8)),
+    ])
+    def test_invariance(self, model, cfg):
+        mod = {"nequip": nequip, "eqv2": eqv2}[model]
+        feat, pos, snd, rcv = small_batch(seed=3)
+        p = mod.init_params(cfg, jax.random.PRNGKey(1))
+        R = rand_rot(11).astype(np.float32)
+        b1 = from_numpy(feat, snd, rcv, pos=pos)
+        b2 = from_numpy(feat, snd, rcv, pos=pos @ R.T)
+        g1 = mod.forward(p, b1, cfg)[0]
+        g2 = mod.forward(p, b2, cfg)[0]
+        scale = float(jnp.abs(g1).max()) + 1e-6
+        assert float(jnp.abs(g1 - g2).max()) / scale < 1e-4
+
+
+# --------------------------------------------------------------------------
+class TestPNA:
+    def test_aggregator_sanity(self):
+        """Star graph: the hub must see all leaf messages."""
+        n = 6
+        feat = np.eye(n, 8, dtype=np.float32)
+        snd = np.arange(1, n, dtype=np.int32)     # leaves -> hub 0
+        rcv = np.zeros(n - 1, dtype=np.int32)
+        cfg = pna.PNAConfig(d_in=8, n_layers=1, d_hidden=8, n_out=3)
+        p = pna.init_params(cfg, jax.random.PRNGKey(0))
+        batch = from_numpy(feat, snd, rcv)
+        out = pna.forward(p, batch, cfg)
+        assert out.shape == (n, 3)
+        assert not bool(jnp.isnan(out).any())
+
+    def test_grad_flows(self):
+        feat, pos, snd, rcv = small_batch(seed=4)
+        cfg = pna.PNAConfig(d_in=8, n_layers=2, d_hidden=8, n_out=4)
+        p = pna.init_params(cfg, jax.random.PRNGKey(0))
+        batch = from_numpy(feat, snd, rcv)
+        labels = jnp.asarray(np.random.default_rng(0).integers(0, 4, 16),
+                             jnp.int32)
+        loss = pna.make_loss(cfg)
+        g = jax.grad(lambda pp: loss(pp, (batch, labels)))(p)
+        gn = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
+        assert np.isfinite(gn) and gn > 0
+
+
+# --------------------------------------------------------------------------
+class TestSampler:
+    def test_caps_and_determinism(self):
+        g = synthetic_csr(500, avg_deg=6, d_feat=12, seed=0)
+        s = NeighborSampler(g, batch_nodes=8, fanout=(3, 2), seed=1)
+        assert (s.node_cap, s.edge_cap) == sample_block_caps(8, (3, 2))
+        b1, l1, _ = s.sample(step=5)
+        b2, l2, _ = s.sample(step=5)
+        np.testing.assert_array_equal(np.asarray(b1.senders),
+                                      np.asarray(b2.senders))
+        np.testing.assert_array_equal(l1, l2)
+        b3, _, _ = s.sample(step=6)
+        assert not np.array_equal(np.asarray(b1.senders),
+                                  np.asarray(b3.senders))
+
+    def test_edges_point_at_targets(self):
+        g = synthetic_csr(300, avg_deg=5, d_feat=4, seed=2)
+        s = NeighborSampler(g, batch_nodes=4, fanout=(3,), seed=0)
+        batch, labels, slots = s.sample(0)
+        rcv = np.asarray(batch.receivers)
+        mask = rcv != batch.n_node
+        assert (rcv[mask] < 4).all()  # 1-hop edges land on targets
+        assert labels.shape == (4,)

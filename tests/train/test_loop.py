@@ -1,0 +1,114 @@
+"""Fault-tolerance tests: checkpoint atomicity, restart equivalence,
+NaN guard, compression, straggler watchdog plumbing."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt, loop, optimizer as opt
+
+
+def loss_fn(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def data_fn(step):
+    rng = np.random.default_rng((7, step))
+    x = rng.normal(size=(16, 4)).astype(np.float32)
+    return {"x": jnp.asarray(x),
+            "y": jnp.asarray(x @ np.arange(1, 5, dtype=np.float32))}
+
+
+PARAMS0 = {"w": jnp.zeros((4,), jnp.float32), "b": jnp.zeros((), jnp.float32)}
+OCFG = opt.AdamWConfig(lr=0.05, warmup_steps=3, total_steps=40,
+                       weight_decay=0.0)
+
+
+def test_restart_equivalence():
+    p_ref, _, _ = loop.run(PARAMS0, loss_fn, data_fn, OCFG,
+                           loop.LoopConfig(total_steps=40))
+    with tempfile.TemporaryDirectory() as d:
+        lcfg = loop.LoopConfig(total_steps=40, ckpt_dir=d, ckpt_every=7)
+        with pytest.raises(RuntimeError):
+            loop.run(PARAMS0, loss_fn, data_fn, OCFG, lcfg,
+                     fail_after=loop.FailAfter(20))
+        p2, _, _ = loop.run(PARAMS0, loss_fn, data_fn, OCFG, lcfg)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ckpt_atomic_commit():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": jnp.arange(5), "b": {"c": jnp.ones((2, 2))}}
+        ckpt.save(d, 3, tree, metadata={"note": "x"})
+        assert ckpt.latest_step(d) == 3
+        restored, step, meta = ckpt.restore(d, tree)
+        assert step == 3 and meta == {"note": "x"}
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.arange(5))
+        # a stale .tmp dir must never shadow the committed checkpoint
+        os.makedirs(os.path.join(d, "step_000000009.tmp"), exist_ok=True)
+        assert ckpt.latest_step(d) == 3
+
+
+def test_ckpt_gc_keeps_newest():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": jnp.arange(3)}
+        for s in (1, 2, 3, 4, 5):
+            ckpt.save(d, s, tree)
+        ckpt.gc_old(d, keep=2)
+        left = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+        assert len(left) == 2 and left[-1].endswith("5")
+
+
+def test_nan_guard_skips_update():
+    def bad_loss(params, batch):
+        # blows up at step >= 1 via batch flag
+        return jnp.where(batch["bad"], jnp.float32(jnp.nan),
+                         jnp.sum(params["w"] ** 2))
+
+    def bad_data(step):
+        return {"bad": jnp.asarray(step >= 1)}
+
+    step_fn = loop.make_train_step(bad_loss, OCFG)
+    params = {"w": jnp.ones((3,), jnp.float32)}
+    state = opt.init(params, OCFG)
+    params, state, s0 = step_fn(params, state, bad_data(0))
+    w_after_good = np.asarray(params["w"]).copy()
+    params, state, s1 = step_fn(params, state, bad_data(1))
+    assert int(s1["skipped"]) == 1
+    np.testing.assert_array_equal(np.asarray(params["w"]), w_after_good)
+
+
+def test_compression_error_feedback_accumulates():
+    g = jnp.asarray([1e-4, 1.0, -0.5], jnp.float32)
+    err = jnp.zeros_like(g)
+    total_deq = jnp.zeros_like(g)
+    for _ in range(64):
+        deq, err = opt._compress_decompress(g, err)
+        total_deq = total_deq + deq
+    # error feedback: the running average converges to the true gradient
+    np.testing.assert_allclose(np.asarray(total_deq) / 64, np.asarray(g),
+                               atol=1e-3)
+
+
+def test_straggler_watchdog_trips():
+    calls = {"n": 0}
+
+    def slow_step(params, state, batch):
+        calls["n"] += 1
+        if calls["n"] == 9:
+            import time
+            time.sleep(0.4)
+        return params, state, {"loss": jnp.float32(0.0)}
+
+    lcfg = loop.LoopConfig(total_steps=20, step_timeout_factor=3.0,
+                           min_timeout_s=0.2)
+    with pytest.raises(loop.StragglerTimeout):
+        loop.run(PARAMS0, loss_fn, data_fn, OCFG, lcfg,
+                 train_step=slow_step)
