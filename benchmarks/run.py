@@ -7,6 +7,8 @@ the kernel microbenches.  ``--fast`` shrinks sizes further (CI).
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import time
 
 
@@ -15,7 +17,7 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table4,figure7,figure8_9,figure10,"
-                         "figure11,table5,kernels")
+                         "figure11,table5,hybrid,kernels")
     args = ap.parse_args()
 
     from benchmarks import kernels_bench, paper_tables as P
@@ -24,10 +26,11 @@ def main() -> None:
 
     def go(name, fn, **kw):
         if wanted and name not in wanted:
-            return
+            return None
         t0 = time.perf_counter()
-        fn(**kw)
+        out = fn(**kw)
         print(f"## {name} done in {time.perf_counter() - t0:.1f}s\n")
+        return out
 
     if args.fast:
         go("table4", P.table4, sizes=((120, 300), (240, 700)), n_updates=5)
@@ -36,6 +39,8 @@ def main() -> None:
         go("figure10", P.figure10, n=150, m=400, n_insert=8, n_delete=2)
         go("figure11", P.figure11, n=150, m=450, n_each=4)
         go("table5", P.table5, n=150, m=400, n_edges_tested=5)
+        hybrid_rows = go("hybrid", P.hybrid_table, n=120, m=300,
+                         n_insert=12, n_delete=4, batch_size=8)
     else:
         go("table4", P.table4)
         go("figure7", P.figure7)
@@ -43,6 +48,11 @@ def main() -> None:
         go("figure10", P.figure10)
         go("figure11", P.figure11)
         go("table5", P.table5)
+        hybrid_rows = go("hybrid", P.hybrid_table)
+    if hybrid_rows is not None:
+        out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_hybrid.json"
+        out.write_text(json.dumps(hybrid_rows, indent=2) + "\n")
+        print(f"wrote {out}")
     go("kernels", lambda: (kernels_bench.query_kernel_vs_jnp(),
                            kernels_bench.segment_matmul_vs_segment_sum()))
 

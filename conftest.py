@@ -1,0 +1,13 @@
+"""Repo-root pytest configuration.
+
+Puts ``src`` on ``sys.path`` so the suite runs with a bare ``pytest``
+invocation (no ``PYTHONPATH=src`` needed, e.g. in CI or an IDE).  Marker
+registration and default deselection of ``slow`` live in ``pytest.ini``.
+"""
+
+import sys
+from pathlib import Path
+
+_SRC = str(Path(__file__).resolve().parent / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

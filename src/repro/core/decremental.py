@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from repro.core import graph as G
 from repro.core.bfs import conditional_spc_bfs, pruned_spc_bfs
 from repro.core.graph import INF, Graph
-from repro.core.labels import SPCIndex, bulk_remove, bulk_upsert
+from repro.core.labels import (SPCIndex, bulk_remove, bulk_upsert,
+                               reset_isolated_row)
 from repro.core.query import one_to_all
 
 
@@ -105,3 +106,61 @@ def dec_spc(g: Graph, idx: SPCIndex, a, b) -> tuple[Graph, SPCIndex]:
 
     _, idx = jax.lax.while_loop(cond, body, (jnp.int32(0), idx))
     return g2, idx
+
+
+def dec_spc_step(g: Graph, idx: SPCIndex, a, b) -> tuple[Graph, SPCIndex]:
+    """Traced single deletion with the Section 3.2.3 isolated-vertex fast
+    path folded in.
+
+    Mirrors the host driver's ``delete_edge`` exactly: when the
+    lower-ranked endpoint has degree 1 it becomes isolated, is never a
+    hub in any other row, and its row collapses to the self label -- a
+    cheap masked reset instead of the full SRRSearch + per-hub repair.
+    Used by :func:`dec_spc_batch` and the hybrid engine
+    (``repro.core.hybrid``) so batched replay is bit-identical to the
+    per-event driver path.
+    """
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    hi = jnp.maximum(a, b)
+    deg_hi = G.degrees(g)[hi]
+
+    def fast(args):
+        g, idx = args
+        return G.delete_edge(g, a, b), reset_isolated_row(idx, hi)
+
+    def full(args):
+        g, idx = args
+        return dec_spc.__wrapped__(g, idx, a, b)
+
+    return jax.lax.cond(deg_hi == 1, fast, full, (g, idx))
+
+
+@jax.jit
+def dec_spc_batch(g: Graph, idx: SPCIndex,
+                  edges: jax.Array) -> tuple[Graph, SPCIndex]:
+    """Batched DecSPC: delete ``edges`` int32[B, 2] sequentially inside
+    ONE jitted call -- the decremental sibling of
+    ``incremental.inc_spc_batch``.
+
+    Rows with a == b are skipped (use as padding for fixed batch
+    shapes).  Caller guarantees every listed edge is present at its turn
+    in the sequence.  Overflow from any step accumulates in the returned
+    index's counter; the driver replays the pre-batch snapshot at a
+    larger capacity.
+    """
+
+    def step(carry, edge):
+        g, idx = carry
+        a, b = edge[0], edge[1]
+
+        def apply(args):
+            g, idx = args
+            return dec_spc_step(g, idx, a, b)
+
+        g, idx = jax.lax.cond(a != b, apply, lambda x: x, (g, idx))
+        return (g, idx), None
+
+    (g, idx), _ = jax.lax.scan(step, (g, idx),
+                               edges.astype(jnp.int32))
+    return g, idx

@@ -8,7 +8,9 @@ Responsibilities beyond the jitted algorithm steps:
   and replays the op, which is sound because all ops are functional);
 * the isolated-vertex fast path of Section 3.2.3;
 * vertex insertion/deletion (reduction to edge events, Section 3);
-* update batching (streams of mixed events, the Section 4.4 scenario);
+* update batching (streams of mixed events, the Section 4.4 scenario,
+  chunked through the hybrid engine ``repro.core.hybrid`` so a whole
+  chunk costs one jitted dispatch);
 * checkpointable state (arrays only -- see ``repro.train.checkpoint``).
 
 This mirrors what the C++ artifact's main loop does, lifted into a
@@ -34,13 +36,27 @@ from repro.core.labels import SPCIndex
 from repro.core.query import batched_query
 
 
+#: Default chunk size for batched event replay.  Chunks are padded to
+#: this length so ``hyb_spc_batch`` compiles once per (cap_e, l_cap)
+#: shape regardless of how many events each call carries.
+DEFAULT_BATCH = 64
+
+
 @dataclasses.dataclass
 class UpdateStats:
     inserts: int = 0
     deletions: int = 0
-    isolated_fast_path: int = 0
+    isolated_fast_path: int = 0  # host-side fast path only; the batched
+    # engine takes the same shortcut inside the trace without counting.
     label_regrows: int = 0
     edge_regrows: int = 0
+    batches: int = 0          # jitted hybrid-engine dispatches
+    batched_events: int = 0   # events carried by those dispatches
+
+    @property
+    def events_per_batch(self) -> float:
+        """Average events amortized per jitted dispatch (batching win)."""
+        return self.batched_events / self.batches if self.batches else 0.0
 
 
 class DynamicSPC:
@@ -102,18 +118,7 @@ class DynamicSPC:
             # Section 3.2.3: the lower-ranked endpoint becomes isolated and
             # is never a hub elsewhere -- reset its row to the self label.
             self.graph = G.delete_edge(self.graph, a, b)
-            idx = self.index
-            n = idx.n
-            row_hub = jnp.full(idx.l_cap, n, jnp.int32).at[0].set(hi)
-            row_dist = jnp.full(idx.l_cap, INF, jnp.int32).at[0].set(0)
-            row_cnt = jnp.zeros(idx.l_cap, jnp.int64).at[0].set(1)
-            self.index = dataclasses.replace(
-                idx,
-                hub=idx.hub.at[hi].set(row_hub),
-                dist=idx.dist.at[hi].set(row_dist),
-                cnt=idx.cnt.at[hi].set(row_cnt),
-                size=idx.size.at[hi].set(1),
-            )
+            self.index = L.reset_isolated_row(self.index, hi)
             self.stats.isolated_fast_path += 1
         else:
             while True:
@@ -150,22 +155,97 @@ class DynamicSPC:
         self.index = L.add_vertices(self.index, 1)
         return self.n - 1
 
-    def delete_vertex(self, v: int) -> None:
+    def delete_vertex(self, v: int,
+                      batch_size: int | None = DEFAULT_BATCH) -> None:
+        """Reduce to edge deletions (Section 3) and replay them through
+        the batched engine -- one jitted dispatch per chunk instead of
+        one per incident edge."""
         src = np.asarray(self.graph.src)
         dst = np.asarray(self.graph.dst)
         nbrs = sorted(set(int(w) for s, w in zip(src, dst) if s == v and w != self.n))
-        for u in nbrs:
-            self.delete_edge(v, u)
+        if not nbrs:
+            return
+        self.apply_events([("-", v, u) for u in nbrs], batch_size=batch_size)
 
-    def apply_events(self, events: Iterable[Tuple[str, int, int]]) -> None:
-        """Apply a stream of ('+'|'-', a, b) events (Section 4.4)."""
+    # -- batched event replay (the hybrid engine) ---------------------------
+    def _edge_set(self) -> set:
+        src = np.asarray(self.graph.src)
+        dst = np.asarray(self.graph.dst)
+        live = (src != self.n) & (src < dst)
+        return {(int(a), int(b)) for a, b in zip(src[live], dst[live])}
+
+    def _validate_events(self, events) -> None:
+        """Host-side simulation of the stream against the current edge
+        set: the batched engine has no way to raise mid-scan, so the
+        per-event error semantics are enforced up front."""
+        present = self._edge_set()
         for op, a, b in events:
-            if op == "+":
-                self.insert_edge(a, b)
-            elif op == "-":
-                self.delete_edge(a, b)
-            else:
+            if op not in ("+", "-"):
                 raise ValueError(f"unknown event {op!r}")
+            if a == b:
+                raise ValueError(f"self loop ({a},{b}) not allowed")
+            key = (a, b) if a < b else (b, a)
+            if op == "+":
+                if key in present:
+                    raise ValueError(f"edge {key} already present")
+                present.add(key)
+            else:
+                if key not in present:
+                    raise ValueError(f"edge {key} not present")
+                present.discard(key)
+
+    def apply_events(self, events: Iterable[Tuple[str, int, int]],
+                     batch_size: int | None = DEFAULT_BATCH) -> None:
+        """Apply a stream of ('+'|'-', a, b) events (Section 4.4).
+
+        By default the stream is chunked and each chunk replays inside
+        ONE jitted dispatch (``hybrid.hyb_spc_batch``), padded with
+        self-loop rows to a fixed shape.  Each chunk gets a single
+        edge-capacity pre-provision and the usual overflow-retry: on
+        label overflow anywhere in the chunk the *pre-chunk* snapshot is
+        re-padded at doubled capacity and the whole chunk replays (sound
+        because every op is functional).  ``batch_size=None`` (or <= 1)
+        falls back to one jitted dispatch per event -- kept as the
+        differential-testing and benchmark baseline.
+        """
+        events = [(op, int(a), int(b)) for op, a, b in events]
+        if batch_size is None or batch_size <= 1:
+            for op, a, b in events:
+                if op == "+":
+                    self.insert_edge(a, b)
+                elif op == "-":
+                    self.delete_edge(a, b)
+                else:
+                    raise ValueError(f"unknown event {op!r}")
+            return
+
+        from repro.core.hybrid import OP_DELETE, OP_INSERT, hyb_spc_batch
+        self._validate_events(events)
+        code = {"+": OP_INSERT, "-": OP_DELETE}
+        for lo in range(0, len(events), batch_size):
+            chunk = events[lo:lo + batch_size]
+            arr = np.zeros((batch_size, 3), dtype=np.int32)  # (0,0,0) pads
+            for i, (op, a, b) in enumerate(chunk):
+                arr[i] = (code[op], a, b)
+            n_ins = sum(1 for op, _, _ in chunk if op == "+")
+            cap_before = self.graph.cap_e
+            self.graph = G.ensure_capacity(self.graph, 2 * n_ins)
+            if self.graph.cap_e != cap_before:
+                self.stats.edge_regrows += 1
+            g0, idx0 = self.graph, self.index  # pre-chunk snapshot
+            ev = jnp.asarray(arr)
+            while True:
+                g2, idx2 = hyb_spc_batch(self.graph, self.index, ev)
+                if int(idx2.overflow) == 0:
+                    self.graph, self.index = g2, idx2
+                    break
+                self.graph = g0
+                self.index = L.repad(idx0, self.index.l_cap * 2)
+                self.stats.label_regrows += 1
+            self.stats.batches += 1
+            self.stats.batched_events += len(chunk)
+            self.stats.inserts += n_ins
+            self.stats.deletions += len(chunk) - n_ins
 
     # -- introspection -------------------------------------------------------
     def index_entries(self) -> int:

@@ -204,6 +204,26 @@ def bulk_remove(idx: SPCIndex, h, mask) -> SPCIndex:
     return dataclasses.replace(idx, hub=hub, dist=dist, cnt=cnt, size=size)
 
 
+def reset_isolated_row(idx: SPCIndex, v) -> SPCIndex:
+    """Collapse row ``v`` to its self label (Section 3.2.3: a vertex
+    isolated by deleting its last edge keeps only ``(v, 0, 1)``).
+
+    Traced-compatible; shared by the host driver's fast path and the
+    batched engines so both produce bit-identical indexes.
+    """
+    v = jnp.asarray(v, jnp.int32)
+    row_hub = jnp.full(idx.l_cap, idx.n, jnp.int32).at[0].set(v)
+    row_dist = jnp.full(idx.l_cap, INF, jnp.int32).at[0].set(0)
+    row_cnt = jnp.zeros(idx.l_cap, jnp.int64).at[0].set(1)
+    return dataclasses.replace(
+        idx,
+        hub=idx.hub.at[v].set(row_hub),
+        dist=idx.dist.at[v].set(row_dist),
+        cnt=idx.cnt.at[v].set(row_cnt),
+        size=idx.size.at[v].set(1),
+    )
+
+
 def get_label(idx: SPCIndex, v, h):
     """(found, dist, cnt) of label (h, ., .) in row v (traced)."""
     row_hub = idx.hub[v]

@@ -74,6 +74,8 @@ def resolve(spec: Sequence[str | None] | None, rules: Mapping[str, Any],
         axis = rules.get(name, None)
         if isinstance(axis, tuple):
             axis = tuple(a for a in axis if a in mesh.axis_names) or None
+            if axis is not None and len(axis) == 1:
+                axis = axis[0]  # normalize like drop_pod: ('data',) == 'data'
         elif axis is not None and axis not in mesh.axis_names:
             axis = None
         axes.append(axis)

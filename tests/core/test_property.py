@@ -9,6 +9,9 @@ and check the invariant plus cross-implementation agreement.
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import build_index, from_edges
