@@ -15,6 +15,10 @@ configurable size and reports the same *quantities* the paper reports.
                one jitted dispatch per event vs the batched engine
                (hyb_spc_batch, one dispatch per chunk) vs full
                reconstruction after every event.
+  serving_table -- (beyond-paper) query-serving routes on a maintained
+               post-update index: the seed eager O(L^2)-table path vs
+               the engine's bucketed jit-merge route vs the Pallas
+               kernel (interpret mode on CPU); queries/sec + us/query.
 
 Each function returns a list of dict rows and prints CSV.  The JAX path
 (``DynamicSPC``) is the system under test; ``refimpl`` is the
@@ -343,6 +347,69 @@ def hybrid_table(n=300, m=800, n_insert=48, n_delete=16, batch_size=16,
          "identical_index": bool(rebuild_identical)},
     ]
     _print_rows("hybrid_batch_replay", rows)
+    return rows
+
+
+# -------------------------------------------------------------------------
+def serving_table(n=300, m=800, n_events=24, n_queries=2048, batch=256,
+                  seed=7) -> List[Dict]:
+    """Serving-route shootout on a *maintained* index (the service has
+    replayed a mixed update stream first, so label rows are the real
+    dynamic ones, not a fresh build).  All routes answer the SAME query
+    stream in chunks of ``batch``; the eager O(L^2)-table path is the
+    seed's ``DynamicSPC.query`` behavior and the baseline for the
+    speedup column."""
+    import jax.numpy as jnp
+
+    from repro.core.query import batched_query
+    from repro.serve import QueryEngine
+
+    edges = random_graph_edges(n, m, seed=seed)
+    svc = DynamicSPC(n, edges, l_cap=32)
+    events = graph_stream(edges, n, 3 * n_events // 4, n_events // 4,
+                          seed=seed)
+    svc.apply_events(events, batch_size=16)
+
+    rng = np.random.default_rng(seed)
+    s = rng.integers(0, n, n_queries)
+    t = rng.integers(0, n, n_queries)
+    idx = svc.index
+
+    def timed(fn):
+        d, c = fn(s[:batch], t[:batch])  # warm the compile cache
+        d.block_until_ready()
+        c.block_until_ready()  # async dispatch: drain before timing
+        t0 = _timer()
+        for lo in range(0, n_queries, batch):
+            d, c = fn(s[lo:lo + batch], t[lo:lo + batch])
+        d.block_until_ready()
+        c.block_until_ready()
+        return _timer() - t0
+
+    eng = QueryEngine()
+    paths = [
+        ("eager_table", lambda ss, tt: batched_query(
+            idx, jnp.asarray(ss), jnp.asarray(tt))),
+        ("engine_jit_merge", lambda ss, tt: eng.query_batch(
+            idx, ss, tt, route="merge")),
+        ("engine_jit_table", lambda ss, tt: eng.query_batch(
+            idx, ss, tt, route="table")),
+        ("engine_pallas_interpret", lambda ss, tt: eng.query_batch(
+            idx, ss, tt, route="pallas")),
+    ]
+    rows = []
+    base = None
+    for name, fn in paths:
+        total = timed(fn)
+        base = total if base is None else base
+        rows.append({
+            "route": name, "queries": n_queries, "batch": batch,
+            "total_s": round(total, 4),
+            "per_query_us": round(1e6 * total / n_queries, 2),
+            "qps": round(n_queries / total, 1),
+            "speedup_vs_eager": round(base / total, 2),
+        })
+    _print_rows("serving_routes", rows)
     return rows
 
 

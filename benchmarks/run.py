@@ -17,7 +17,7 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table4,figure7,figure8_9,figure10,"
-                         "figure11,table5,hybrid,kernels")
+                         "figure11,table5,hybrid,serving,kernels")
     args = ap.parse_args()
 
     from benchmarks import kernels_bench, paper_tables as P
@@ -41,6 +41,8 @@ def main() -> None:
         go("table5", P.table5, n=150, m=400, n_edges_tested=5)
         hybrid_rows = go("hybrid", P.hybrid_table, n=120, m=300,
                          n_insert=12, n_delete=4, batch_size=8)
+        serving_rows = go("serving", P.serving_table, n=150, m=400,
+                          n_events=8, n_queries=512, batch=128)
     else:
         go("table4", P.table4)
         go("figure7", P.figure7)
@@ -49,9 +51,15 @@ def main() -> None:
         go("figure11", P.figure11)
         go("table5", P.table5)
         hybrid_rows = go("hybrid", P.hybrid_table)
+        serving_rows = go("serving", P.serving_table)
+    root = pathlib.Path(__file__).resolve().parent.parent
     if hybrid_rows is not None:
-        out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_hybrid.json"
+        out = root / "BENCH_hybrid.json"
         out.write_text(json.dumps(hybrid_rows, indent=2) + "\n")
+        print(f"wrote {out}")
+    if serving_rows is not None:
+        out = root / "BENCH_serving.json"
+        out.write_text(json.dumps(serving_rows, indent=2) + "\n")
         print(f"wrote {out}")
     go("kernels", lambda: (kernels_bench.query_kernel_vs_jnp(),
                            kernels_bench.segment_matmul_vs_segment_sum()))

@@ -14,13 +14,18 @@ Layers (bottom-up):
 * ``dynamic``     -- host-side service driver (capacity, events, state).
 * ``refimpl``     -- paper-faithful sequential oracle & baselines.
 * ``distributed`` -- shard_map variants (edge-sharded BFS, sharded queries).
+
+The serving read path lives one package up in ``repro.serve``: a routed,
+bucket-padded engine over the row-level cores exported by ``query``.
 """
 
 import repro  # noqa: F401  (enables x64 before any array is created)
 
 from repro.core.graph import Graph, from_edges, INF
 from repro.core.labels import SPCIndex, empty_index
-from repro.core.query import pair_query, pre_pair_query, batched_query, one_to_all
+from repro.core.query import (pair_query, pre_pair_query, batched_query,
+                              batched_query_merge, gather_rows, merge_rows,
+                              one_to_all)
 from repro.core.bfs import plain_spc_bfs, pruned_spc_bfs
 from repro.core.construct import build_index
 from repro.core.incremental import inc_spc, inc_spc_batch
@@ -31,7 +36,8 @@ from repro.core.dynamic import DynamicSPC
 __all__ = [
     "Graph", "from_edges", "INF",
     "SPCIndex", "empty_index",
-    "pair_query", "pre_pair_query", "batched_query", "one_to_all",
+    "pair_query", "pre_pair_query", "batched_query", "batched_query_merge",
+    "gather_rows", "merge_rows", "one_to_all",
     "plain_spc_bfs", "pruned_spc_bfs",
     "build_index", "inc_spc", "inc_spc_batch",
     "dec_spc", "dec_spc_batch", "srr_search",

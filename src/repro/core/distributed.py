@@ -32,11 +32,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.5 exports it at top level
+    from jax import shard_map
+except ImportError:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map
+
 from repro.core import graph as G
 from repro.core.bfs import BFSResult
 from repro.core.graph import INF, Graph
 from repro.core.labels import SPCIndex, bulk_append, empty_index
-from repro.core.query import one_to_all, pair_query_merge
+from repro.core.query import gather_rows, merge_rows, one_to_all
 
 
 def pad_graph_for(g: Graph, num_shards: int) -> Graph:
@@ -57,7 +62,7 @@ def make_sharded_relax(mesh: Mesh, edge_axis: str):
         part = jax.ops.segment_sum(contrib, dst_blk, num_segments=cnt.shape[0])
         return jax.lax.psum(part, edge_axis)
 
-    return jax.shard_map(
+    return shard_map(
         local_relax,
         mesh=mesh,
         in_specs=(P(edge_axis), P(edge_axis), P(), P()),
@@ -138,15 +143,18 @@ def make_sharded_query(mesh: Mesh, batch_axes: Tuple[str, ...] = ("data",)):
     """Batched SPC queries sharded over the query batch.
 
     The index is replicated (read-only serving replica); each device
-    answers its slice of the (s, t) pair batch.
+    gathers its slice's label rows once and answers through the same
+    row-level merge core the serving engine uses
+    (``repro.serve.QueryEngine.sharded`` wraps this with bucket padding
+    so callers keep arbitrary batch sizes).
     """
     spec = P(batch_axes)
 
     def local_query(idx, s_blk, t_blk):
-        return jax.vmap(pair_query_merge,
-                        in_axes=(None, 0, 0))(idx, s_blk, t_blk)
+        rows = gather_rows(idx, s_blk) + gather_rows(idx, t_blk)
+        return merge_rows(*rows)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_query,
         mesh=mesh,
         in_specs=(P(), spec, spec),

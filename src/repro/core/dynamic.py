@@ -30,10 +30,9 @@ from repro.core import graph as G
 from repro.core import labels as L
 from repro.core.construct import build_index
 from repro.core.decremental import dec_spc
-from repro.core.graph import INF, Graph
+from repro.core.graph import Graph
 from repro.core.incremental import inc_spc
 from repro.core.labels import SPCIndex
-from repro.core.query import batched_query
 
 
 #: Default chunk size for batched event replay.  Chunks are padded to
@@ -65,6 +64,7 @@ class DynamicSPC:
     def __init__(self, n: int, edges: Sequence[Tuple[int, int]] = (),
                  l_cap: int = 32, cap_e: int | None = None) -> None:
         self.stats = UpdateStats()
+        self._engine = None
         self.graph = G.from_edges(n, edges, cap_e)
         self.index = self._build(l_cap)
 
@@ -86,17 +86,39 @@ class DynamicSPC:
         return self.graph.n
 
     # -- queries -----------------------------------------------------------
-    def query(self, s: int, t: int) -> Tuple[int, int]:
-        d, c = batched_query(self.index, jnp.asarray([s]), jnp.asarray([t]))
-        d = int(d[0])
-        return (d if d < int(INF) else int(INF), int(c[0]))
+    @property
+    def engine(self):
+        """The serving engine (``repro.serve.QueryEngine``); every query
+        entry point of this driver routes through it."""
+        if self._engine is None:
+            from repro.serve import QueryEngine
+            self._engine = QueryEngine()
+        return self._engine
 
-    def query_batch(self, s, t):
-        from repro.core.query import batched_query_jit
-        return batched_query_jit(self.index, jnp.asarray(s), jnp.asarray(t))
+    def query(self, s: int, t: int) -> Tuple[int, int]:
+        # bounds validation happens inside the engine (host-side)
+        return self.engine.query_pair(self.index, s, t)
+
+    def query_batch(self, s, t, route: str | None = None):
+        # bounds validation happens inside the engine (host-side)
+        return self.engine.query_batch(self.index, s, t, route=route)
 
     # -- updates -----------------------------------------------------------
+    def _check_vertex(self, v: int, *, what: str = "vertex") -> None:
+        """Host-side bounds check: out-of-range ids would silently clamp
+        under JAX scatter/gather semantics and corrupt the dump row."""
+        v = int(v)
+        if not 0 <= v < self.n:
+            raise ValueError(f"{what} id {v} out of range [0, {self.n})")
+
+    def _check_edge_ids(self, a: int, b: int) -> None:
+        self._check_vertex(a, what="endpoint")
+        self._check_vertex(b, what="endpoint")
+        if int(a) == int(b):
+            raise ValueError(f"self loop ({a},{b}) not allowed")
+
     def insert_edge(self, a: int, b: int) -> None:
+        self._check_edge_ids(a, b)
         if bool(G.has_edge(self.graph, a, b)):
             raise ValueError(f"edge ({a},{b}) already present")
         self.graph = G.ensure_capacity(self.graph, 2)
@@ -110,6 +132,7 @@ class DynamicSPC:
         self.stats.inserts += 1
 
     def delete_edge(self, a: int, b: int) -> None:
+        self._check_edge_ids(a, b)
         if not bool(G.has_edge(self.graph, a, b)):
             raise ValueError(f"edge ({a},{b}) not present")
         lo, hi = (a, b) if a < b else (b, a)
@@ -136,6 +159,7 @@ class DynamicSPC:
         from repro.core.incremental import inc_spc_batch
         edges = [(a, b) for a, b in edges]
         for a, b in edges:
+            self._check_edge_ids(a, b)
             if bool(G.has_edge(self.graph, a, b)):
                 raise ValueError(f"edge ({a},{b}) already present")
         self.graph = G.ensure_capacity(self.graph, 2 * len(edges))
@@ -160,6 +184,7 @@ class DynamicSPC:
         """Reduce to edge deletions (Section 3) and replay them through
         the batched engine -- one jitted dispatch per chunk instead of
         one per incident edge."""
+        self._check_vertex(v)
         src = np.asarray(self.graph.src)
         dst = np.asarray(self.graph.dst)
         nbrs = sorted(set(int(w) for s, w in zip(src, dst) if s == v and w != self.n))
@@ -182,8 +207,7 @@ class DynamicSPC:
         for op, a, b in events:
             if op not in ("+", "-"):
                 raise ValueError(f"unknown event {op!r}")
-            if a == b:
-                raise ValueError(f"self loop ({a},{b}) not allowed")
+            self._check_edge_ids(a, b)
             key = (a, b) if a < b else (b, a)
             if op == "+":
                 if key in present:
@@ -276,4 +300,5 @@ class DynamicSPC:
             size=jnp.asarray(state["index.size"]),
             overflow=jnp.int32(0), n=n)
         obj.stats = UpdateStats()
+        obj._engine = None
         return obj

@@ -12,6 +12,13 @@ Two evaluation strategies, both O(1)-control-flow for XLA:
   against the table in O(L).  Used inside construction/updates where one
   hub is queried against all vertices (turns the per-level O(n L^2) of a
   naive transcription into O(n L) per hub, computed once per BFS).
+
+Row-level cores (``gather_rows`` / ``merge_rows`` / ``table_rows`` /
+``count_upper_bound_rows``) operate on *gathered* label rows so callers
+that hold B (s, t) pairs gather each side exactly once and reuse the rows
+across routing decisions and evaluation -- this is the contract of the
+serving engine (``repro.serve``) and the sharded query path
+(``repro.core.distributed``).
 """
 
 from __future__ import annotations
@@ -77,6 +84,48 @@ def pair_query_merge(idx: SPCIndex, s, t):
 
 
 batched_query_merge = jax.vmap(pair_query_merge, in_axes=(None, 0, 0))
+
+
+# --------------------------------------------------------------------------
+# Row-level cores: evaluate *gathered* label rows ([B, L] per operand).
+# --------------------------------------------------------------------------
+def gather_rows(idx: SPCIndex, v):
+    """Label rows of vertices ``v``: (hub, dist, cnt), each [B, L_cap].
+
+    Rows stay sorted by hub id (storage order) with pad ``hub = n``, so
+    they feed ``merge_rows`` directly.
+    """
+    return idx.hub[v], idx.dist[v], idx.cnt[v]
+
+
+#: Batched sorted-merge intersection over gathered rows (six [B, L]
+#: operands -> (dist int32[B], cnt int64[B])).  The serving default.
+#: Tolerates a t side whose pad sentinel was re-padded to n + 1 for the
+#: Pallas kernel (real hub ids are < n, and n + 1 still sorts last).
+merge_rows = jax.vmap(_intersect_merge)
+
+#: One-dispatch variant for callers that already hold gathered rows.
+merge_rows_jit = jax.jit(merge_rows)
+
+#: Batched L x L comparison-table intersection over gathered rows; the
+#: trailing ``limit`` is shared (pass n + 1 for the full query).  Same
+#: arithmetic as the Pallas kernel but int64-exact.
+table_rows = jax.vmap(_intersect, in_axes=(0, 0, 0, 0, 0, 0, None))
+
+
+def count_upper_bound_rows(cnt_s, cnt_t):
+    """Sound per-row upper bound on the pair count, [B] float64.
+
+    ``SpcQuery(s, t).cnt = sum over common hubs of cnt_s * cnt_t`` and
+    every term is non-negative, so ``sum(cnt_s) * sum(cnt_t)`` bounds the
+    count AND every partial sum/product the fp32 kernel forms.  Rows whose
+    bound stays below 2^24 are therefore provably exact on the fp32 path
+    (pad entries carry cnt = 0 and do not inflate the bound).  float64 so
+    the bound itself cannot overflow (exact to 2^53).
+    """
+    tot_s = jnp.sum(cnt_s, axis=1).astype(jnp.float64)
+    tot_t = jnp.sum(cnt_t, axis=1).astype(jnp.float64)
+    return tot_s * tot_t
 
 
 def pre_pair_query(idx: SPCIndex, s, t):

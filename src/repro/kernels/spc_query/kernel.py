@@ -13,9 +13,12 @@ default block_b=128, L=128: 384 KiB), leaving the comparison table
 inside the ~16 MiB VMEM budget.
 
 Counts are fp32 *in the kernel only* (TPU VPU has no int64): exact up to
-2^24; the int64 jnp path in ``repro.core.query`` remains the default for
-index maintenance, this kernel serves read-only queries (see DESIGN.md
-"Hardware adaptation").
+2^24.  Callers must not invoke this kernel blind on dense/high-
+multiplicity graphs -- ``ops.index_query_batch`` (and the serving engine
+``repro.serve``) guard it with the per-row count bound and fall back to
+the int64 sorted-merge path when a row could exceed 2^24; the int64 jnp
+path in ``repro.core.query`` remains the default for index maintenance
+(see DESIGN.md "Hardware adaptation").
 """
 
 from __future__ import annotations

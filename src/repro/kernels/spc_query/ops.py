@@ -1,28 +1,100 @@
-"""Jit'd public wrapper: query an SPCIndex through the Pallas kernel."""
+"""Jit'd public wrappers: query an SPCIndex through the Pallas kernel.
+
+Exactness contract: the kernel accumulates counts in fp32 (the TPU VPU
+has no int64), which represents integers exactly only up to
+``EXACT_COUNT_MAX = 2^24``.  ``index_query_batch`` therefore checks a
+cheap per-row bound (``sum(cnt_s) * sum(cnt_t)``, which dominates the
+true count and every fp32 partial sum -- see
+``repro.core.query.count_upper_bound_rows``) and, when any row might
+exceed the bound, answers the batch on the int64 sorted-merge path
+instead of returning silently wrong counts.  ``exact=False`` restores
+the raw fp32 kernel contract for benchmarking.
+"""
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.labels import SPCIndex
+from repro.core.query import (count_upper_bound_rows, gather_rows,
+                              merge_rows_jit)
 from repro.kernels.spc_query.kernel import spc_query_pallas
+
+#: Largest integer count the fp32 kernel is guaranteed to report exactly.
+EXACT_COUNT_MAX = 2 ** 24
+
+
+def prep_rows(idx: SPCIndex, s, t):
+    """Gather the six label-row operands for a pair batch, kernel-ready.
+
+    The sentinel hub id on the s side keeps its pad value (n) and the t
+    side is re-padded to n + 1 so pad rows never produce spurious
+    equality hits inside the L x L table.
+    """
+    hub_s, dist_s, cnt_s = gather_rows(idx, s)
+    hub_t, dist_t, cnt_t = gather_rows(idx, t)
+    hub_t = jnp.where(hub_t == idx.n, idx.n + 1, hub_t)
+    return hub_s, dist_s, cnt_s, hub_t, dist_t, cnt_t
+
+
+@jax.jit
+def gather_rows_with_bound(idx: SPCIndex, s, t):
+    """One dispatch: kernel-ready rows + the batch's exactness bound.
+
+    The rows feed *either* the Pallas kernel or the int64 merge fallback
+    (``merge_rows`` tolerates the re-padded t side), so the host-side
+    route decision on the bound costs one gather and one scalar sync.
+    """
+    rows = prep_rows(idx, s, t)
+    bound = jnp.max(count_upper_bound_rows(rows[2], rows[5]), initial=0.0)
+    return rows, bound
+
+
+def rows_query_pallas(hub_s, dist_s, cnt_s, hub_t, dist_t, cnt_t, *,
+                      block_b: int = 128, interpret: bool | None = None):
+    """Kernel entry on pre-gathered rows (t side already re-padded)."""
+    return spc_query_pallas(
+        hub_s.astype(jnp.int32), dist_s.astype(jnp.int32),
+        cnt_s.astype(jnp.float32),
+        hub_t.astype(jnp.int32), dist_t.astype(jnp.int32),
+        cnt_t.astype(jnp.float32),
+        block_b=block_b, interpret=interpret)
+
+
+def exact_query_batch(idx: SPCIndex, s, t, *, block_b: int = 128,
+                      interpret: bool | None = None):
+    """THE exactness-routed kernel call, shared by ``index_query_batch``
+    and the serving engine: gather once, check the per-row bound, run
+    the fp32 kernel only when provably exact.
+
+    Returns (dist int32[B], count int64[B], route) with route one of
+    ``"pallas"`` / ``"pallas->merge"`` (the int64 fallback).
+    """
+    rows, bound = gather_rows_with_bound(idx, s, t)
+    if float(bound) >= EXACT_COUNT_MAX:
+        d, c = merge_rows_jit(*rows)
+        return d, c, "pallas->merge"
+    d, c = rows_query_pallas(*rows, block_b=block_b, interpret=interpret)
+    return d, c.astype(jnp.int64), "pallas"
 
 
 def index_query_batch(idx: SPCIndex, s, t, *, block_b: int = 128,
-                      interpret: bool | None = None):
+                      interpret: bool | None = None, exact: bool = True):
     """Batched (s, t) queries against the label matrices.
 
-    Gathers the label rows then invokes the kernel.  The sentinel hub id
-    on the s side keeps its pad value (n) and the t side is re-padded to
-    n+1 so pad rows never produce spurious equality hits.
+    With ``exact=True`` (default) the per-row count bound is checked
+    host-side: batches where every row is provably < 2^24 run through
+    the fp32 kernel, anything else falls back to the int64 sorted-merge
+    path; either way the result is (dist int32[B], count int64[B]).
+    ``exact=False`` skips the check and returns the kernel's raw
+    (int32[B], float32[B]).
     """
-    hub_s = idx.hub[s]
-    hub_t = idx.hub[t]
-    n = idx.n
-    hub_t = jnp.where(hub_t == n, n + 1, hub_t)  # pad != pad across sides
-    return spc_query_pallas(
-        hub_s.astype(jnp.int32), idx.dist[s].astype(jnp.int32),
-        idx.cnt[s].astype(jnp.float32),
-        hub_t.astype(jnp.int32), idx.dist[t].astype(jnp.int32),
-        idx.cnt[t].astype(jnp.float32),
-        block_b=block_b, interpret=interpret)
+    s = jnp.asarray(s)
+    t = jnp.asarray(t)
+    if exact:
+        d, c, _ = exact_query_batch(idx, s, t, block_b=block_b,
+                                    interpret=interpret)
+        return d, c
+    return rows_query_pallas(*prep_rows(idx, s, t), block_b=block_b,
+                             interpret=interpret)

@@ -1,0 +1,12 @@
+"""Query-serving subsystem: one engine in front of every SPC read path.
+
+``QueryEngine`` unifies the three intersection implementations (eager
+L x L table, jitted int64 sorted-merge, Pallas TPU kernel) behind a
+single routed, bucket-padded, compile-cached entry point; see
+``repro.serve.engine`` for the route decision table.
+"""
+
+from repro.serve.engine import (DEFAULT_BUCKETS, QueryEngine, ServeStats,
+                                bucket_size)
+
+__all__ = ["QueryEngine", "ServeStats", "DEFAULT_BUCKETS", "bucket_size"]

@@ -1,0 +1,199 @@
+"""Unified SPC query-serving engine (the DSPC read hot path).
+
+The whole point of maintaining the SPC-Index under updates (DSPC §4)
+is that serving stays O(L) hub-label work per query; this module makes
+that the *engineered* path instead of three diverging ones:
+
+1. **Gather once.**  Each batch gathers the six label-row operands
+   ([B, L] per side) a single time; the routing decision and every
+   evaluation route consume the same rows.
+2. **Bucket-pad.**  Batches are padded to a small static set of bucket
+   sizes (``DEFAULT_BUCKETS``) with dump-row pairs ``(n, n)`` -- which
+   evaluate to the disconnected sentinel and are sliced off -- so the
+   jit compile cache holds one executable per (bucket, l_cap) instead
+   of one per observed batch size.
+3. **Route.**  Per batch, by backend and exactness:
+
+   ========  ==========================================  ===========
+   route     when                                        counts
+   ========  ==========================================  ===========
+   merge     default (CPU, or any row's bound >= 2^24)   int64 exact
+   pallas    TPU/kernel backend AND every per-row count  fp32, exact
+             bound ``sum(cnt_s) * sum(cnt_t)`` < 2^24    by the bound
+   table     explicit only (eager-parity debugging; the  int64 exact
+             O(L^2) arithmetic of the kernel, in jnp)
+   ========  ==========================================  ===========
+
+   A ``pallas`` request whose batch fails the bound is answered on the
+   merge path and recorded as ``pallas->merge`` in the stats -- the
+   silent-overflow bug this engine exists to close.
+4. **Shard.**  ``QueryEngine.sharded`` wraps
+   ``repro.core.distributed.make_sharded_query`` (index replicated,
+   batch split over mesh axes) with the same pad-and-slice handling so
+   multi-device replicas serve arbitrary batch sizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import query as Q
+from repro.core.labels import SPCIndex
+from repro.kernels.spc_query.ops import exact_query_batch
+
+#: Static batch shapes the jit cache may hold.  Batches larger than the
+#: last bucket are padded to the next multiple of it.
+DEFAULT_BUCKETS = (8, 64, 256, 1024)
+
+
+def bucket_size(b: int, buckets=DEFAULT_BUCKETS) -> int:
+    """Smallest bucket >= b (multiples of the largest bucket beyond)."""
+    for cap in buckets:
+        if b <= cap:
+            return cap
+    top = buckets[-1]
+    return -(-b // top) * top
+
+
+#: The merge route IS the one fused jitted merge entry point of
+#: ``core.query`` (gather + sorted-merge in a single dispatch).
+_serve_merge = Q.batched_query_jit
+
+
+@jax.jit
+def _serve_table(idx: SPCIndex, s, t):
+    rows = Q.gather_rows(idx, s) + Q.gather_rows(idx, t)
+    return Q.table_rows(*rows, jnp.int32(idx.n + 1))
+
+
+@dataclasses.dataclass
+class ServeStats:
+    queries: int = 0          # real (un-padded) queries answered
+    batches: int = 0          # engine dispatches
+    routes: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def count(self, route: str, queries: int) -> None:
+        self.queries += queries
+        self.batches += 1
+        self.routes[route] = self.routes.get(route, 0) + 1
+
+
+class QueryEngine:
+    """Routed, bucket-padded serving front end over one SPCIndex pytree.
+
+    Stateless with respect to the index (pass it per call -- updates
+    produce new functional snapshots), stateful only in routing config
+    and counters, so one engine can front many replicas.
+    """
+
+    ROUTES = ("auto", "merge", "table", "pallas")
+
+    def __init__(self, *, route: str = "auto", buckets=DEFAULT_BUCKETS,
+                 block_b: int = 128, interpret: bool | None = None) -> None:
+        if route not in self.ROUTES:
+            raise ValueError(f"unknown route {route!r}; want one of "
+                             f"{self.ROUTES}")
+        self.route = route
+        self.buckets = tuple(buckets)
+        self.block_b = block_b
+        self.interpret = interpret
+        self.stats = ServeStats()
+
+    # -- routing -----------------------------------------------------------
+    def _kernel_backend(self) -> bool:
+        return jax.default_backend() == "tpu"
+
+    @staticmethod
+    def _validate_ids(n: int, s: np.ndarray, t: np.ndarray) -> None:
+        """Host-side bounds check: jnp gathers wrap negative ids and
+        clamp ids > n, silently answering for the *wrong* vertex."""
+        for arr in (s, t):
+            if arr.size and (arr.min() < 0 or arr.max() >= n):
+                bad = arr[(arr < 0) | (arr >= n)][0]
+                raise ValueError(
+                    f"vertex id {int(bad)} out of range [0, {n})")
+
+    # -- serving -----------------------------------------------------------
+    def query_batch(self, idx: SPCIndex, s, t,
+                    route: str | None = None) -> Tuple[jax.Array, jax.Array]:
+        """Answer B (s, t) pairs: (dist int32[B], count int64[B])."""
+        s = np.asarray(s).reshape(-1)  # validate on the natural dtype --
+        t = np.asarray(t).reshape(-1)  # an int32 cast could wrap huge ids
+        if s.shape != t.shape:
+            raise ValueError(f"s/t shape mismatch: {s.shape} vs {t.shape}")
+        route = route or self.route
+        if route not in self.ROUTES:
+            raise ValueError(f"unknown route {route!r}; want one of "
+                             f"{self.ROUTES}")
+        self._validate_ids(idx.n, s, t)
+        s = s.astype(np.int32)
+        t = t.astype(np.int32)
+        b = s.shape[0]
+        pad = bucket_size(b, self.buckets) - b
+        if pad:  # dump-row pairs: evaluate to (INF, 0), sliced off below
+            s = np.pad(s, (0, pad), constant_values=idx.n)
+            t = np.pad(t, (0, pad), constant_values=idx.n)
+        want_pallas = route == "pallas" or (route == "auto"
+                                            and self._kernel_backend())
+        if route == "table":
+            chosen = "table"
+            d, c = _serve_table(idx, s, t)
+        elif not want_pallas:
+            chosen = "merge"
+            d, c = _serve_merge(idx, s, t)
+        else:
+            # The shared exactness-routed kernel call: gathers once,
+            # syncs one bound scalar, falls back to int64 merge when a
+            # row could exceed 2^24 on the fp32 path.
+            d, c, chosen = exact_query_batch(idx, s, t,
+                                             block_b=self.block_b,
+                                             interpret=self.interpret)
+        self.stats.count(chosen, b)
+        return d[:b], c[:b]
+
+    def query_pair(self, idx: SPCIndex, s: int, t: int) -> Tuple[int, int]:
+        """Single (s, t) query through the same bucketed batch path (pads
+        to the smallest bucket; no per-call L x L table, no recompiles)."""
+        d, c = self.query_batch(idx, [s], [t])
+        return int(d[0]), int(c[0])
+
+    # -- multi-device serving ----------------------------------------------
+    def sharded(self, mesh, batch_axes: Tuple[str, ...] = ("data",)):
+        """Serving closure over replicated-index / batch-sharded replicas.
+
+        Returns ``serve(idx, s, t) -> (dist[B], cnt[B])``; batches are
+        padded with dump-row pairs to a bucket that divides evenly over
+        the mesh axes, so callers keep arbitrary batch sizes.
+        """
+        from repro.core.distributed import make_sharded_query
+
+        fn = make_sharded_query(mesh, batch_axes)
+        shards = 1
+        for ax in batch_axes:
+            shards *= mesh.shape[ax]
+
+        def serve(idx: SPCIndex, s, t):
+            s = np.asarray(s).reshape(-1)
+            t = np.asarray(t).reshape(-1)
+            if s.shape != t.shape:
+                raise ValueError(
+                    f"s/t shape mismatch: {s.shape} vs {t.shape}")
+            self._validate_ids(idx.n, s, t)
+            s = s.astype(np.int32)
+            t = t.astype(np.int32)
+            b = s.shape[0]
+            bp = bucket_size(b, self.buckets)
+            bp = -(-bp // shards) * shards  # divisible over the mesh axes
+            if bp != b:
+                s = np.pad(s, (0, bp - b), constant_values=idx.n)
+                t = np.pad(t, (0, bp - b), constant_values=idx.n)
+            d, c = fn(idx, jnp.asarray(s), jnp.asarray(t))
+            self.stats.count(f"sharded[{'x'.join(batch_axes)}]", b)
+            return d[:b], c[:b]
+
+        return serve

@@ -58,6 +58,15 @@ SCRIPT = textwrap.dedent(
         d, c = batched_query(ref_idx, s, t)
         assert (np.asarray(d_sh) == np.asarray(d)).all()
         assert (np.asarray(c_sh) == np.asarray(c)).all()
+
+        # serving-engine sharded mode: pads ragged batches to a bucket
+        # divisible over the data axis, slices the pads back off
+        from repro.serve import QueryEngine
+        serve = QueryEngine().sharded(mesh, batch_axes=("data",))
+        d_e, c_e = serve(idx, s[:37], t[:37])  # 37 % 2 != 0 on purpose
+        assert d_e.shape == (37,)
+        assert (np.asarray(d_e) == np.asarray(d)[:37]).all()
+        assert (np.asarray(c_e) == np.asarray(c)[:37]).all()
     print("DISTRIBUTED_OK")
     """
 )

@@ -1,0 +1,73 @@
+"""Host-side input validation of the DynamicSPC driver.
+
+Out-of-range vertex ids must raise ``ValueError`` instead of silently
+clamping under JAX scatter/gather semantics (which would corrupt the
+dump row n) -- and a rejected op must leave the service untouched."""
+
+import numpy as np
+import pytest
+
+from repro.core.dynamic import DynamicSPC
+from repro.core.labels import to_ref
+from repro.data import random_graph_edges
+
+
+@pytest.fixture(scope="module")
+def svc():
+    n = 20
+    return DynamicSPC(n, random_graph_edges(n, 45, seed=5), l_cap=32)
+
+
+BAD_EDGES = [(-1, 3), (3, -1), (0, 20), (20, 0), (0, 10 ** 9), (7, 7)]
+
+
+@pytest.mark.parametrize("a,b", BAD_EDGES)
+def test_insert_edge_rejects_bad_ids(svc, a, b):
+    before = to_ref(svc.index).labels
+    with pytest.raises(ValueError):
+        svc.insert_edge(a, b)
+    assert to_ref(svc.index).labels == before
+
+
+@pytest.mark.parametrize("a,b", BAD_EDGES)
+def test_delete_edge_rejects_bad_ids(svc, a, b):
+    with pytest.raises(ValueError):
+        svc.delete_edge(a, b)
+
+
+@pytest.mark.parametrize("a,b", BAD_EDGES)
+def test_apply_events_batched_rejects_bad_ids(svc, a, b):
+    """The batched engine cannot raise mid-scan; _validate_events must
+    catch bad ids up front, before any chunk dispatches."""
+    before = to_ref(svc.index).labels
+    with pytest.raises(ValueError):
+        svc.apply_events([("+", 0, 19), ("+", a, b)], batch_size=8)
+    assert to_ref(svc.index).labels == before
+
+
+def test_insert_edges_rejects_bad_ids(svc):
+    with pytest.raises(ValueError):
+        svc.insert_edges([(0, 19), (2, 20)])
+
+
+def test_query_rejects_bad_ids(svc):
+    for s, t in ((-1, 0), (0, 20), (20, 20)):
+        with pytest.raises(ValueError):
+            svc.query(s, t)
+    with pytest.raises(ValueError):
+        svc.query_batch([0, 1], [1, 20])
+    with pytest.raises(ValueError):
+        svc.query_batch(np.asarray([-3]), np.asarray([0]))
+
+
+def test_delete_vertex_rejects_bad_ids(svc):
+    for v in (-1, 20, 10 ** 9):
+        with pytest.raises(ValueError):
+            svc.delete_vertex(v)
+
+
+def test_dump_row_stays_clean_after_rejections(svc):
+    """The dump row (row n) is the clamp target; it must stay all-pad."""
+    hub = np.asarray(svc.index.hub)
+    assert (hub[svc.n] == svc.n).all()
+    assert int(svc.index.size[svc.n]) == 0

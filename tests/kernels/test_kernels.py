@@ -53,9 +53,34 @@ class TestSpcQueryKernel:
         t = jnp.asarray([6, 9, 11, 8, 5], jnp.int32)
         d_k, c_k = index_query_batch(idx, s, t, interpret=True)
         d_r, c_r = batched_query(idx, s, t)
+        assert c_k.dtype == jnp.int64  # exact contract of the wrapper
         np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
-        np.testing.assert_allclose(np.asarray(c_k),
-                                   np.asarray(c_r).astype(np.float32))
+        np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+
+    def test_counts_above_2_24_fall_back_to_int64(self):
+        """Regression: fp32 kernel counts are exact only to 2^24; the
+        wrapper's per-row bound must detect this and serve the batch on
+        the int64 merge path instead of silently rounding."""
+        from repro.core.labels import from_ref
+        from repro.core.refimpl import RefSPCIndex
+        from repro.kernels.spc_query.ops import EXACT_COUNT_MAX
+
+        big = EXACT_COUNT_MAX + 1  # odd, not representable in fp32
+        ref = RefSPCIndex(3)
+        ref.labels[0] = [(0, 0, 1)]
+        ref.labels[1] = [(0, 1, big), (1, 0, 1)]
+        ref.labels[2] = [(0, 2, 7), (2, 0, 1)]
+        idx = from_ref(ref, l_cap=4)
+        d, c = index_query_batch(idx, jnp.asarray([0, 0]), jnp.asarray([1, 2]),
+                                 interpret=True)
+        assert c.dtype == jnp.int64
+        assert (int(d[0]), int(c[0])) == (1, big)      # exact
+        assert (int(d[1]), int(c[1])) == (2, 7)
+        # the raw fp32 contract demonstrably rounds the same query
+        _, c_raw = index_query_batch(idx, jnp.asarray([0]), jnp.asarray([1]),
+                                     interpret=True, exact=False)
+        assert c_raw.dtype == jnp.float32
+        assert float(c_raw[0]) == EXACT_COUNT_MAX  # off by one: 2^24, not 2^24+1
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,162 @@
+"""Differential tests of the serving engine: every route (eager table,
+jit merge, Pallas interpret) against the ``bfs_spc`` oracle on *real*
+dynamic indexes -- post-insert, post-delete, disconnected pairs and
+isolated vertices -- plus bucketing, routing and overflow-fallback
+behavior."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import refimpl as R
+from repro.core.dynamic import DynamicSPC
+from repro.core.graph import INF
+from repro.core.labels import from_ref
+from repro.core.query import batched_query
+from repro.data import random_graph_edges
+from repro.serve import DEFAULT_BUCKETS, QueryEngine, bucket_size
+
+ROUTES = ("merge", "table", "pallas")
+
+
+def oracle(svc: DynamicSPC):
+    """(dist, cnt) lookup tables from BFS on the *current* graph."""
+    g = R.RefGraph(svc.n, sorted(svc._edge_set()))
+    return {s: R.bfs_spc(g, s) for s in range(svc.n)}
+
+
+def assert_matches_oracle(svc, eng, s, t, truth):
+    d0, c0 = batched_query(svc.index, jnp.asarray(s), jnp.asarray(t))
+    for route in ROUTES:
+        d, c = eng.query_batch(svc.index, s, t, route=route)
+        assert c.dtype == jnp.int64
+        # all routes bit-identical with the seed eager path
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(d0),
+                                      err_msg=route)
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(c0),
+                                      err_msg=route)
+    for k, (sk, tk) in enumerate(zip(s, t)):
+        dist, cnt = truth[sk]
+        if dist[tk] >= int(INF):
+            assert int(c0[k]) == 0 and int(d0[k]) >= int(INF), (sk, tk)
+        else:
+            assert (int(d0[k]), int(c0[k])) == (int(dist[tk]), int(cnt[tk]))
+
+
+@pytest.fixture(scope="module")
+def dynamic_service():
+    """A service that has lived: built, inserted, deleted, with a vertex
+    isolated by deletion and a disconnected component."""
+    n = 40
+    edges = [(a, b) for a, b in random_graph_edges(n, 90, seed=3)
+             if max(a, b) < n - 4]  # leave 36..39 out of the initial graph
+    svc = DynamicSPC(n, edges, l_cap=64)
+    present = set(edges)
+    # post-insert: attach 36<->37 to the main component, link 38-39 only
+    # to each other (disconnected 2-component)
+    ins = [(0, 36), (36, 37), (38, 39)]
+    # post-delete: remove real edges, and isolate vertex 37 again via the
+    # Section 3.2.3 fast path
+    dels = [next(iter(present))] + [(36, 37)]
+    svc.apply_events([("+", a, b) for a, b in ins]
+                     + [("-", a, b) for a, b in dels])
+    return svc
+
+
+def test_routes_match_oracle_on_dynamic_index(dynamic_service):
+    svc = dynamic_service
+    eng = QueryEngine()
+    truth = oracle(svc)
+    rng = np.random.default_rng(0)
+    s = [int(x) for x in rng.integers(0, svc.n, 150)]
+    t = [int(x) for x in rng.integers(0, svc.n, 150)]
+    # force coverage of the interesting pairs
+    s += [0, 38, 38, 37, 37, 5]
+    t += [36, 39, 0, 37, 4, 5]  # post-insert, 2-comp, disconnected,
+    #                             isolated self, isolated-vs-main, self
+    assert_matches_oracle(svc, eng, s, t, truth)
+    assert set(eng.stats.routes) == set(ROUTES)
+    assert eng.stats.queries == len(s) * len(ROUTES)
+
+
+def test_driver_query_paths_agree(dynamic_service):
+    svc = dynamic_service
+    rng = np.random.default_rng(1)
+    s = rng.integers(0, svc.n, 20)
+    t = rng.integers(0, svc.n, 20)
+    d, c = svc.query_batch(s, t)
+    for k in range(len(s)):
+        assert svc.query(int(s[k]), int(t[k])) == (int(d[k]), int(c[k]))
+    # both driver entry points route through the one engine
+    assert set(svc.engine.stats.routes) == {"merge"}
+
+
+def test_bucket_padding_static_shapes(dynamic_service):
+    svc = dynamic_service
+    assert [bucket_size(b) for b in (1, 8, 9, 64, 65, 1024, 1025, 5000)] \
+        == [8, 8, 64, 64, 256, 1024, 2048, 5120]
+    eng = QueryEngine()
+    for b in (1, 3, 5, 8):  # all land in the same bucket -> one compile
+        s = list(range(b))
+        d, c = eng.query_batch(svc.index, s, s)
+        assert d.shape == (b,) and c.shape == (b,)
+        # every (k, k) self query answers (0, 1) regardless of where the
+        # batch's pad rows start -- padding must not leak into the tail
+        for k in range(b):
+            assert (int(d[k]), int(c[k])) == (0, 1)
+    assert eng.stats.batches == 4
+
+
+def test_pallas_overflow_falls_back_to_int64(dynamic_service):
+    """Counts above 2^24 must not be served from the fp32 kernel."""
+    big = 2 ** 24 + 1  # not representable in fp32
+    ref = R.RefSPCIndex(2)
+    ref.labels[0] = [(0, 0, 1)]
+    ref.labels[1] = [(0, 1, big), (1, 0, 1)]
+    idx = from_ref(ref, l_cap=4)
+    eng = QueryEngine()
+    d, c = eng.query_batch(idx, [0], [1], route="pallas")
+    assert (int(d[0]), int(c[0])) == (1, big)
+    assert eng.stats.routes == {"pallas->merge": 1}
+    # a small-count batch on the same engine still takes the kernel
+    d, c = eng.query_batch(dynamic_service.index, [0], [1], route="pallas")
+    assert "pallas" in eng.stats.routes
+
+
+def test_sharded_serving_single_device(dynamic_service):
+    import jax
+    from jax.sharding import Mesh
+
+    svc = dynamic_service
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    eng = QueryEngine()
+    serve = eng.sharded(mesh)
+    rng = np.random.default_rng(2)
+    s = rng.integers(0, svc.n, 11)  # deliberately not a bucket size
+    t = rng.integers(0, svc.n, 11)
+    d_sh, c_sh = serve(svc.index, s, t)
+    d, c = eng.query_batch(svc.index, s, t, route="merge")
+    np.testing.assert_array_equal(np.asarray(d_sh), np.asarray(d))
+    np.testing.assert_array_equal(np.asarray(c_sh), np.asarray(c))
+    assert eng.stats.routes["sharded[data]"] == 1
+
+
+def test_engine_rejects_unknown_route(dynamic_service):
+    with pytest.raises(ValueError):
+        QueryEngine(route="bogus")
+    eng = QueryEngine()
+    with pytest.raises(ValueError):
+        eng.query_batch(dynamic_service.index, [0], [1], route="bogus")
+    with pytest.raises(ValueError):
+        eng.query_batch(dynamic_service.index, [0, 1], [1])  # shape mismatch
+
+
+def test_stats_dataclass_shape():
+    from repro.serve import ServeStats
+    st = ServeStats()
+    st.count("merge", 5)
+    st.count("merge", 3)
+    assert dataclasses.asdict(st) == {
+        "queries": 8, "batches": 2, "routes": {"merge": 2}}
