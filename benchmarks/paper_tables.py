@@ -19,6 +19,10 @@ configurable size and reports the same *quantities* the paper reports.
                post-update index: the seed eager O(L^2)-table path vs
                the engine's bucketed jit-merge route vs the Pallas
                kernel (interpret mode on CPU); queries/sec + us/query.
+  dist_update_table -- (beyond-paper) replicated vs edge-sharded update
+               engines (``make_distributed_updater``) replaying the
+               SAME mixed stream; needs forced host devices for a real
+               mesh (``benchmarks.run`` sets XLA_FLAGS when selected).
 
 Each function returns a list of dict rows and prints CSV.  The JAX path
 (``DynamicSPC``) is the system under test; ``refimpl`` is the
@@ -347,6 +351,70 @@ def hybrid_table(n=300, m=800, n_insert=48, n_delete=16, batch_size=16,
          "identical_index": bool(rebuild_identical)},
     ]
     _print_rows("hybrid_batch_replay", rows)
+    return rows
+
+
+# -------------------------------------------------------------------------
+def dist_update_table(n=200, m=520, n_events=16, batch_size=8, shards=4,
+                      seed=8) -> List[Dict]:
+    """Replicated vs edge-sharded update engines (ROADMAP "sharded
+    update path") replaying the SAME mixed stream through
+    ``DynamicSPC.apply_events``.
+
+    The sharded engine runs the identical algorithms with the
+    relaxation partitioned over the mesh's edge axis (one psum per BFS
+    level); ``identical_index`` is measured, not assumed.  On one CPU
+    with forced host devices the psum is pure overhead -- the point of
+    the table is the dispatch/communication accounting and the
+    index-equality check; the throughput win needs real accelerators
+    (edge shards >> psum latency)."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.core.labels import to_ref
+
+    devs = jax.devices()
+    shards = max(1, min(shards, len(devs)))
+    mesh = Mesh(np.asarray(devs[:shards]), ("model",))
+    edges = random_graph_edges(n, m, seed=seed)
+    events = graph_stream(edges, n, 3 * n_events // 4,
+                          n_events - 3 * n_events // 4, seed=seed)
+    E = len(events)
+
+    # warm both jit caches on scratch replicas (make_distributed_updater
+    # is memoized per mesh, so the timed sharded service reuses the warm
+    # executables)
+    DynamicSPC(n, edges, l_cap=32).apply_events(events,
+                                                batch_size=batch_size)
+    DynamicSPC(n, edges, l_cap=32, mesh=mesh).apply_events(
+        events, batch_size=batch_size)
+
+    rep = DynamicSPC(n, edges, l_cap=32)
+    t0 = _timer()
+    rep.apply_events(events, batch_size=batch_size)
+    t_rep = _timer() - t0
+
+    sh = DynamicSPC(n, edges, l_cap=32, mesh=mesh)
+    t0 = _timer()
+    sh.apply_events(events, batch_size=batch_size)
+    t_sh = _timer() - t0
+
+    identical = to_ref(sh.index).labels == to_ref(rep.index).labels
+    rows = [
+        {"engine": "replicated", "devices": 1, "events": E,
+         "dispatches": rep.stats.batches,
+         "total_s": round(t_rep, 4),
+         "per_event_ms": round(1e3 * t_rep / E, 3),
+         "events_per_s": round(E / t_rep, 1),
+         "identical_index": True},
+        {"engine": "edge_sharded", "devices": shards, "events": E,
+         "dispatches": sh.stats.batches,
+         "total_s": round(t_sh, 4),
+         "per_event_ms": round(1e3 * t_sh / E, 3),
+         "events_per_s": round(E / t_sh, 1),
+         "identical_index": bool(identical)},
+    ]
+    _print_rows("dist_update_engines", rows)
     return rows
 
 

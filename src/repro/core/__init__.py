@@ -13,7 +13,9 @@ Layers (bottom-up):
   per event chunk; Section 4.4 workloads).
 * ``dynamic``     -- host-side service driver (capacity, events, state).
 * ``refimpl``     -- paper-faithful sequential oracle & baselines.
-* ``distributed`` -- shard_map variants (edge-sharded BFS, sharded queries).
+* ``distributed`` -- shard_map variants: edge-sharded relaxation plugged
+  into the shared BFS/update bodies (``make_distributed_builder``,
+  ``make_distributed_updater``) and batch-sharded queries.
 
 The serving read path lives one package up in ``repro.serve``: a routed,
 bucket-padded engine over the row-level cores exported by ``query``.

@@ -16,19 +16,29 @@ at distance d is pruned iff ``dbar[v] < d``.  Pruned vertices keep their
 (dist, cnt) so they are not re-discovered, but they never expand and are
 excluded from the ``keep`` mask handed to the label-update pass.
 
-The relaxation is routed through ``repro.kernels.segment_matmul`` when the
-kernel path is enabled; the default is ``jax.ops.segment_sum`` which XLA
-lowers to a sorted scatter-add.
+The relaxation primitive is *pluggable*: every BFS below accepts a
+``relax_fn(src, dst, cnt, frontier) -> sums`` callable and defaults to the
+single-device :func:`edge_relax`.  This is the one seam the paper's
+Limitations section admits for parallelism -- vertices of one BFS level
+are independent -- so the distributed engines
+(``repro.core.distributed``) swap in an edge-sharded shard_map relaxation
+(local segment-sum per edge shard + one ``psum`` per level) and every
+algorithm layer above (construction, IncSPC, DecSPC, HybSPC) is written
+once against the abstract relaxation.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.graph import INF, Graph
+
+#: ``relax_fn(src, dst, cnt, frontier) -> int64[n + 1]`` per-destination
+#: sums of frontier counts over the (possibly sharded) edge list.
+RelaxFn = Callable[[jax.Array, jax.Array, jax.Array, jax.Array], jax.Array]
 
 
 class BFSResult(NamedTuple):
@@ -38,10 +48,20 @@ class BFSResult(NamedTuple):
     levels: jax.Array  # int32: number of relaxation rounds executed
 
 
+def edge_relax(src: jax.Array, dst: jax.Array, cnt: jax.Array,
+               frontier: jax.Array) -> jax.Array:
+    """One edge relaxation: per-destination sums of frontier counts.
+
+    The single-device default ``RelaxFn``; ``n + 1`` is recovered from
+    ``cnt`` so the same signature serves sharded edge blocks.
+    """
+    contrib = jnp.where(frontier[src], cnt[src], jnp.int64(0))
+    return jax.ops.segment_sum(contrib, dst, num_segments=cnt.shape[0])
+
+
 def relax(g: Graph, cnt: jax.Array, frontier: jax.Array) -> jax.Array:
-    """One edge relaxation: per-destination sums of frontier counts."""
-    contrib = jnp.where(frontier[g.src], cnt[g.src], jnp.int64(0))
-    return jax.ops.segment_sum(contrib, g.dst, num_segments=g.n + 1)
+    """Graph-level convenience wrapper over :func:`edge_relax`."""
+    return edge_relax(g.src, g.dst, cnt, frontier)
 
 
 def pruned_spc_bfs(
@@ -52,6 +72,7 @@ def pruned_spc_bfs(
     dbar: jax.Array,
     rank_floor=None,
     max_levels: int | None = None,
+    relax_fn: RelaxFn | None = None,
 ) -> BFSResult:
     """Pruned counting BFS used by construction, IncSPC and DecSPC.
 
@@ -65,7 +86,12 @@ def pruned_spc_bfs(
       rank_floor: if given, only vertices with id >= rank_floor may be
         discovered (the paper's ``h <= w`` rank pruning).
       max_levels: loop bound (defaults to n, the worst-case diameter).
+      relax_fn: relaxation primitive; default :func:`edge_relax`
+        (single-device).  Distributed callers pass the edge-sharded
+        variant from ``repro.core.distributed.make_sharded_relax``.
     """
+    if relax_fn is None:
+        relax_fn = edge_relax
     n1 = g.n + 1
     ids = jnp.arange(n1, dtype=jnp.int32)
     eligible = ids < g.n  # never the dump row
@@ -89,7 +115,7 @@ def pruned_spc_bfs(
 
     def body(state):
         dist, cnt, frontier, keep, level, rounds = state
-        sums = relax(g, cnt, frontier)
+        sums = relax_fn(g.src, g.dst, cnt, frontier)
         newly = (sums > 0) & (dist == INF) & eligible
         dist = jnp.where(newly, level + 1, dist)
         cnt = jnp.where(newly, sums, cnt)
@@ -114,6 +140,7 @@ def conditional_spc_bfs(
     root,
     stop_mask_fn,
     max_levels: int | None = None,
+    relax_fn: RelaxFn | None = None,
 ) -> BFSResult:
     """BFS whose expansion stops at vertices failing ``stop_mask_fn``.
 
@@ -122,6 +149,8 @@ def conditional_spc_bfs(
     with their final dist/cnt for the level).  Used by SRRSearch where the
     continue test is ``dist[v] + 1 == sd(v, b)``.
     """
+    if relax_fn is None:
+        relax_fn = edge_relax
     n1 = g.n + 1
     ids = jnp.arange(n1, dtype=jnp.int32)
     eligible = ids < g.n
@@ -138,7 +167,7 @@ def conditional_spc_bfs(
 
     def body(state):
         dist, cnt, frontier, rounds = state
-        sums = relax(g, cnt, frontier)
+        sums = relax_fn(g.src, g.dst, cnt, frontier)
         newly = (sums > 0) & (dist == INF) & eligible
         dist = jnp.where(newly, rounds + 1, dist)
         cnt = jnp.where(newly, sums, cnt)

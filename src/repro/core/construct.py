@@ -6,6 +6,11 @@ relaxation and its pruning distances are evaluated once per hub via the
 dense one-vs-all PreQuery.  Complexity per hub: O(n L) for the query table
 plus O(m) per BFS level -- versus the paper's O(k l) queue walk with
 pointer chasing.
+
+The relaxation primitive is pluggable (see ``repro.core.bfs.RelaxFn``):
+``build_index(..., relax_fn=...)`` with the edge-sharded relaxation from
+``repro.core.distributed`` IS the distributed builder -- there is no
+separate construction loop.
 """
 
 from __future__ import annotations
@@ -15,20 +20,22 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.bfs import pruned_spc_bfs
+from repro.core.bfs import RelaxFn, pruned_spc_bfs
 from repro.core.graph import Graph
 from repro.core.labels import SPCIndex, bulk_append, empty_index
 from repro.core.query import one_to_all
 
 
-def _hub_round(g: Graph, idx: SPCIndex, v) -> SPCIndex:
+def _hub_round(g: Graph, idx: SPCIndex, v,
+               relax_fn: RelaxFn | None = None) -> SPCIndex:
     dbar, _ = one_to_all(idx, v, limit=v)  # PreQuery(v, .) for every vertex
-    res = pruned_spc_bfs(g, v, 0, 1, dbar, rank_floor=v)
+    res = pruned_spc_bfs(g, v, 0, 1, dbar, rank_floor=v, relax_fn=relax_fn)
     return bulk_append(idx, v, res.dist, res.cnt, res.keep)
 
 
-@partial(jax.jit, static_argnames=("l_cap",))
-def build_index(g: Graph, l_cap: int) -> SPCIndex:
+@partial(jax.jit, static_argnames=("l_cap", "relax_fn"))
+def build_index(g: Graph, l_cap: int,
+                relax_fn: RelaxFn | None = None) -> SPCIndex:
     """Construct the SPC-Index of ``g`` with label capacity ``l_cap``.
 
     Returns an index whose ``overflow`` field is > 0 if any label did not
@@ -36,5 +43,5 @@ def build_index(g: Graph, l_cap: int) -> SPCIndex:
     ``repro.core.dynamic.DynamicSPC``).
     """
     idx0 = empty_index(g.n, l_cap)
-    body = lambda v, idx: _hub_round(g, idx, v)
+    body = lambda v, idx: _hub_round(g, idx, v, relax_fn)
     return jax.lax.fori_loop(0, g.n, body, idx0)

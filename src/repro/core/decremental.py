@@ -11,6 +11,11 @@ The isolated-vertex optimization (Section 3.2.3) lives in the host-side
 driver (``repro.core.dynamic``) since it short-circuits the whole
 procedure; the traced path below is correct for that case too, just
 slower.
+
+Every entry point accepts a ``relax_fn`` (static under jit) so both the
+SRRSearch BFSs and the per-hub repair BFS run against the abstract
+relaxation -- the distributed engines pass the edge-sharded shard_map
+variant (see ``repro.core.distributed.make_distributed_updater``).
 """
 
 from __future__ import annotations
@@ -21,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import graph as G
-from repro.core.bfs import conditional_spc_bfs, pruned_spc_bfs
+from repro.core.bfs import RelaxFn, conditional_spc_bfs, pruned_spc_bfs
 from repro.core.graph import INF, Graph
 from repro.core.labels import (SPCIndex, bulk_remove, bulk_upsert,
                                reset_isolated_row)
@@ -36,10 +41,11 @@ class SRRSets(NamedTuple):
     l_ab: jax.Array  # bool[n + 1]: common hubs of a and b
 
 
-def _side(g: Graph, idx: SPCIndex, root, d_other, c_other, l_ab):
+def _side(g: Graph, idx: SPCIndex, root, d_other, c_other, l_ab,
+          relax_fn: RelaxFn | None = None):
     """One direction of Algorithm 5 (run with the edge still present)."""
     stop = lambda dist, cnt, newly: dist + 1 == d_other
-    res = conditional_spc_bfs(g, root, stop)
+    res = conditional_spc_bfs(g, root, stop, relax_fn=relax_fn)
     visited = res.dist < INF
     unpruned = visited & (res.dist + 1 == d_other)
     sr = unpruned & (l_ab | (res.cnt == c_other))
@@ -47,7 +53,8 @@ def _side(g: Graph, idx: SPCIndex, root, d_other, c_other, l_ab):
     return sr, r
 
 
-def srr_search(g: Graph, idx: SPCIndex, a, b) -> SRRSets:
+def srr_search(g: Graph, idx: SPCIndex, a, b,
+               relax_fn: RelaxFn | None = None) -> SRRSets:
     """Algorithm 5 for both sides."""
     n = idx.n
     hubs_a = idx.hub[a]
@@ -57,15 +64,17 @@ def srr_search(g: Graph, idx: SPCIndex, a, b) -> SRRSets:
     l_ab = in_a & in_b
     d_b, c_b = one_to_all(idx, b)  # SpcQuery(v, b) for every v
     d_a, c_a = one_to_all(idx, a)
-    sr_a, r_a = _side(g, idx, a, d_b, c_b, l_ab)
-    sr_b, r_b = _side(g, idx, b, d_a, c_a, l_ab)
+    sr_a, r_a = _side(g, idx, a, d_b, c_b, l_ab, relax_fn)
+    sr_b, r_b = _side(g, idx, b, d_a, c_a, l_ab, relax_fn)
     return SRRSets(sr_a=sr_a, sr_b=sr_b, r_a=r_a, r_b=r_b, l_ab=l_ab)
 
 
-def _dec_update(g: Graph, idx: SPCIndex, h, affected, h_ab) -> SPCIndex:
+def _dec_update(g: Graph, idx: SPCIndex, h, affected, h_ab,
+                relax_fn: RelaxFn | None = None) -> SPCIndex:
     """Algorithm 6, bulk form (post-deletion graph)."""
     dpre, _ = one_to_all(idx, h, limit=h)  # PreQuery(h, v) for every v
-    res = pruned_spc_bfs(g, h, 0, 1, dbar=dpre, rank_floor=h)
+    res = pruned_spc_bfs(g, h, 0, 1, dbar=dpre, rank_floor=h,
+                         relax_fn=relax_fn)
     upd = res.keep & affected  # U[.]
     idx = bulk_upsert(idx, h, res.dist, res.cnt, upd)
     remove_mask = affected & ~upd
@@ -75,13 +84,13 @@ def _dec_update(g: Graph, idx: SPCIndex, h, affected, h_ab) -> SPCIndex:
         lambda i: i, idx)
 
 
-@jax.jit
-def dec_spc(g: Graph, idx: SPCIndex, a, b) -> tuple[Graph, SPCIndex]:
-    """Algorithm 4: delete edge (a, b) and repair the index."""
+def _dec_spc(g: Graph, idx: SPCIndex, a, b,
+             relax_fn: RelaxFn | None = None) -> tuple[Graph, SPCIndex]:
+    """Algorithm 4 (traced body; see :func:`dec_spc`)."""
     a = jnp.asarray(a, jnp.int32)
     b = jnp.asarray(b, jnp.int32)
     n = idx.n
-    sets = srr_search(g, idx, a, b)
+    sets = srr_search(g, idx, a, b, relax_fn)
     g2 = G.delete_edge(g, a, b)
 
     ids = jnp.arange(n + 1, dtype=jnp.int32)
@@ -101,14 +110,19 @@ def dec_spc(g: Graph, idx: SPCIndex, a, b) -> tuple[Graph, SPCIndex]:
         h = sr_ids[k]
         is_a_side = sets.sr_a[h]
         affected = jnp.where(is_a_side, aff_b, aff_a)
-        idx = _dec_update(g2, idx, h, affected, sets.l_ab[h])
+        idx = _dec_update(g2, idx, h, affected, sets.l_ab[h], relax_fn)
         return k + 1, idx
 
     _, idx = jax.lax.while_loop(cond, body, (jnp.int32(0), idx))
     return g2, idx
 
 
-def dec_spc_step(g: Graph, idx: SPCIndex, a, b) -> tuple[Graph, SPCIndex]:
+#: Algorithm 4: delete edge (a, b) and repair the index.
+dec_spc = jax.jit(_dec_spc, static_argnames=("relax_fn",))
+
+
+def dec_spc_step(g: Graph, idx: SPCIndex, a, b,
+                 relax_fn: RelaxFn | None = None) -> tuple[Graph, SPCIndex]:
     """Traced single deletion with the Section 3.2.3 isolated-vertex fast
     path folded in.
 
@@ -131,32 +145,26 @@ def dec_spc_step(g: Graph, idx: SPCIndex, a, b) -> tuple[Graph, SPCIndex]:
 
     def full(args):
         g, idx = args
-        return dec_spc.__wrapped__(g, idx, a, b)
+        return _dec_spc(g, idx, a, b, relax_fn)
 
     return jax.lax.cond(deg_hi == 1, fast, full, (g, idx))
 
 
-@jax.jit
-def dec_spc_batch(g: Graph, idx: SPCIndex,
-                  edges: jax.Array) -> tuple[Graph, SPCIndex]:
-    """Batched DecSPC: delete ``edges`` int32[B, 2] sequentially inside
-    ONE jitted call -- the decremental sibling of
-    ``incremental.inc_spc_batch``.
+#: One-dispatch variant of :func:`dec_spc_step` (the distributed updater
+#: and other single-delete callers jit here; the batch engines inline the
+#: traced body instead).
+dec_spc_step_jit = jax.jit(dec_spc_step, static_argnames=("relax_fn",))
 
-    Rows with a == b are skipped (use as padding for fixed batch
-    shapes).  Caller guarantees every listed edge is present at its turn
-    in the sequence.  Overflow from any step accumulates in the returned
-    index's counter; the driver replays the pre-batch snapshot at a
-    larger capacity.
-    """
 
+def _dec_spc_batch(g: Graph, idx: SPCIndex, edges: jax.Array,
+                   relax_fn: RelaxFn | None = None) -> tuple[Graph, SPCIndex]:
     def step(carry, edge):
         g, idx = carry
         a, b = edge[0], edge[1]
 
         def apply(args):
             g, idx = args
-            return dec_spc_step(g, idx, a, b)
+            return dec_spc_step(g, idx, a, b, relax_fn)
 
         g, idx = jax.lax.cond(a != b, apply, lambda x: x, (g, idx))
         return (g, idx), None
@@ -164,3 +172,13 @@ def dec_spc_batch(g: Graph, idx: SPCIndex,
     (g, idx), _ = jax.lax.scan(step, (g, idx),
                                edges.astype(jnp.int32))
     return g, idx
+
+
+#: Batched DecSPC: delete ``edges`` int32[B, 2] sequentially inside ONE
+#: jitted call -- the decremental sibling of
+#: ``incremental.inc_spc_batch``.  Rows with a == b are skipped (use as
+#: padding for fixed batch shapes).  Caller guarantees every listed edge
+#: is present at its turn in the sequence.  Overflow from any step
+#: accumulates in the returned index's counter; the driver replays the
+#: pre-batch snapshot at a larger capacity.
+dec_spc_batch = jax.jit(_dec_spc_batch, static_argnames=("relax_fn",))

@@ -18,30 +18,38 @@ so we
   identically (cheaper than communicating masked scatters at our scales;
   revisited in EXPERIMENTS.md SPerf).
 
+Because every algorithm layer (construction, IncSPC, DecSPC, HybSPC) is
+written against the abstract relaxation ``repro.core.bfs.RelaxFn``, this
+module contains **no BFS loop of its own**: :func:`make_sharded_relax`
+builds the edge-sharded primitive and :func:`make_distributed_builder` /
+:func:`make_distributed_updater` jit the shared algorithm bodies with it
+baked in as a static argument.
+
 On the production mesh (see ``repro.launch.mesh``) the edge axis maps to
 ``"model"`` and the query-batch axis to ``"data"`` x ``"pod"``.
 """
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Tuple
+import dataclasses
+from functools import lru_cache, partial
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 try:  # jax >= 0.5 exports it at top level
     from jax import shard_map
 except ImportError:  # pragma: no cover - version-dependent
     from jax.experimental.shard_map import shard_map
 
-from repro.core import graph as G
-from repro.core.bfs import BFSResult
-from repro.core.graph import INF, Graph
-from repro.core.labels import SPCIndex, bulk_append, empty_index
-from repro.core.query import gather_rows, merge_rows, one_to_all
+from repro.core import decremental as D
+from repro.core import hybrid as H
+from repro.core import incremental as I
+from repro.core.construct import build_index
+from repro.core.graph import Graph
+from repro.core.query import gather_rows, merge_rows
 
 
 def pad_graph_for(g: Graph, num_shards: int) -> Graph:
@@ -55,7 +63,13 @@ def pad_graph_for(g: Graph, num_shards: int) -> Graph:
 
 
 def make_sharded_relax(mesh: Mesh, edge_axis: str):
-    """Edge-sharded relaxation: local segment-sum + one psum per level."""
+    """Edge-sharded relaxation: local segment-sum + one psum per level.
+
+    The returned callable has the ``repro.core.bfs.RelaxFn`` signature,
+    so it plugs directly into every BFS / update engine.  The edge
+    arrays it receives must have ``cap_e`` divisible by the size of
+    ``edge_axis`` (see :func:`pad_graph_for`).
+    """
 
     def local_relax(src_blk, dst_blk, cnt, frontier):
         contrib = jnp.where(frontier[src_blk], cnt[src_blk], jnp.int64(0))
@@ -70,73 +84,84 @@ def make_sharded_relax(mesh: Mesh, edge_axis: str):
     )
 
 
-def sharded_pruned_bfs(
-    g: Graph,
-    root,
-    root_dist,
-    root_cnt,
-    dbar: jax.Array,
-    relax_fn,
-    rank_floor=None,
-    max_levels: int | None = None,
-) -> BFSResult:
-    """``bfs.pruned_spc_bfs`` with a pluggable (sharded) relaxation."""
-    n1 = g.n + 1
-    ids = jnp.arange(n1, dtype=jnp.int32)
-    eligible = ids < g.n
-    if rank_floor is not None:
-        eligible &= ids >= jnp.asarray(rank_floor, jnp.int32)
-    dist = jnp.full(n1, INF, dtype=jnp.int32).at[root].set(
-        jnp.asarray(root_dist, jnp.int32))
-    cnt = jnp.zeros(n1, dtype=jnp.int64).at[root].set(
-        jnp.asarray(root_cnt, jnp.int64))
-    root_keep = dbar[root] >= jnp.asarray(root_dist, jnp.int32)
-    frontier = jnp.zeros(n1, dtype=bool).at[root].set(root_keep)
-    keep = frontier
-    level = jnp.asarray(root_dist, jnp.int32)
-    if max_levels is None:
-        max_levels = g.n
-
-    def cond(state):
-        _, _, frontier, _, _, rounds = state
-        return jnp.any(frontier) & (rounds < max_levels)
-
-    def body(state):
-        dist, cnt, frontier, keep, level, rounds = state
-        sums = relax_fn(g.src, g.dst, cnt, frontier)
-        newly = (sums > 0) & (dist == INF) & eligible
-        dist = jnp.where(newly, level + 1, dist)
-        cnt = jnp.where(newly, sums, cnt)
-        pruned = newly & (dbar < dist)
-        frontier = newly & ~pruned
-        keep = keep | frontier
-        return dist, cnt, frontier, keep, level + 1, rounds + 1
-
-    dist, cnt, frontier, keep, level, rounds = jax.lax.while_loop(
-        cond, body, (dist, cnt, frontier, keep, level, jnp.int32(0)))
-    return BFSResult(dist=dist, cnt=cnt, keep=keep, levels=rounds)
-
-
 def make_distributed_builder(mesh: Mesh, edge_axis: str = "model"):
     """HP-SPC construction with edge-sharded BFS levels.
 
     Returns ``build(g, l_cap) -> SPCIndex``; ``g`` must be padded via
-    :func:`pad_graph_for` with the size of ``edge_axis``.
+    :func:`pad_graph_for` with the size of ``edge_axis``.  Delegates to
+    the memoized updater so equal meshes share one ``relax_fn`` identity
+    (= one jit compile cache) across builders and ``DynamicSPC`` modes.
+    """
+    return make_distributed_updater(mesh, edge_axis).build_index
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedUpdater:
+    """Edge-sharded update engine over one mesh axis.
+
+    Each member is the corresponding replicated engine jitted with the
+    mesh's sharded relaxation baked in (static), so the update
+    algorithms themselves are the shared single-source bodies: local
+    segment-sum per edge shard, one ``psum`` per BFS level, label
+    matrices replicated (the module's 1D decomposition).  Graphs handed
+    to any member must satisfy ``cap_e % num_shards == 0`` -- call
+    :meth:`pad` after every capacity change (``DynamicSPC`` does).
+    """
+
+    mesh: Mesh
+    edge_axis: str
+    num_shards: int
+    relax_fn: Callable
+    build_index: Callable    # (g, l_cap) -> SPCIndex
+    inc_spc: Callable        # (g, idx, a, b) -> (g, idx)
+    inc_spc_batch: Callable  # (g, idx, edges[B, 2]) -> (g, idx)
+    dec_spc: Callable        # (g, idx, a, b) -> (g, idx), no fast path
+    dec_spc_step: Callable   # dec_spc + traced isolated-vertex fast path
+    dec_spc_batch: Callable  # (g, idx, edges[B, 2]) -> (g, idx)
+    hyb_spc_batch: Callable  # (g, idx, events[B, 3]) -> (g, idx)
+
+    def pad(self, g: Graph) -> Graph:
+        return pad_graph_for(g, self.num_shards)
+
+
+@lru_cache(maxsize=None)
+def make_distributed_updater(mesh: Mesh,
+                             edge_axis: str = "model") -> DistributedUpdater:
+    """Edge-sharded IncSPC/DecSPC/HybSPC variants (ROADMAP "sharded
+    update path").
+
+    Memoized on (mesh, edge_axis): jit keys the static ``relax_fn`` by
+    identity, so handing every caller the SAME shard_map closure for
+    equal meshes is what lets all ``DynamicSPC(mesh=...)`` replicas of
+    one process share their compiled update executables.
+
+    The one admissible parallelism inside an update (paper Limitations
+    section) is the per-level frontier relaxation of each affected hub's
+    repair BFS; sharding the edge list over ``edge_axis`` parallelizes
+    exactly that while the hub loop and the label matrices stay
+    replicated.  All returned engines preserve the replicated engines'
+    contract bit-for-bit (same overflow counter, same padding-row
+    semantics), so ``DynamicSPC`` reuses its capacity pre-provision /
+    overflow-retry machinery unchanged in ``mesh=`` mode.
     """
     relax_fn = make_sharded_relax(mesh, edge_axis)
-
-    @partial(jax.jit, static_argnames=("l_cap",))
-    def build(g: Graph, l_cap: int) -> SPCIndex:
-        idx0 = empty_index(g.n, l_cap)
-
-        def hub_round(v, idx):
-            dbar, _ = one_to_all(idx, v, limit=v)
-            res = sharded_pruned_bfs(g, v, 0, 1, dbar, relax_fn, rank_floor=v)
-            return bulk_append(idx, v, res.dist, res.cnt, res.keep)
-
-        return jax.lax.fori_loop(0, g.n, hub_round, idx0)
-
-    return build
+    num_shards = int(mesh.shape[edge_axis])
+    # partial() over the module-level jitted entry points: all updaters
+    # (and the replicated default, relax_fn=None) share one compile
+    # cache per algorithm, keyed by the static relax_fn.
+    return DistributedUpdater(
+        mesh=mesh,
+        edge_axis=edge_axis,
+        num_shards=num_shards,
+        relax_fn=relax_fn,
+        build_index=partial(build_index, relax_fn=relax_fn),
+        inc_spc=partial(I.inc_spc, relax_fn=relax_fn),
+        inc_spc_batch=partial(I.inc_spc_batch, relax_fn=relax_fn),
+        dec_spc=partial(D.dec_spc, relax_fn=relax_fn),
+        dec_spc_step=partial(D.dec_spc_step_jit, relax_fn=relax_fn),
+        dec_spc_batch=partial(D.dec_spc_batch, relax_fn=relax_fn),
+        hyb_spc_batch=partial(H.hyb_spc_batch, relax_fn=relax_fn),
+    )
 
 
 def make_sharded_query(mesh: Mesh, batch_axes: Tuple[str, ...] = ("data",)):

@@ -11,6 +11,15 @@ Responsibilities beyond the jitted algorithm steps:
 * update batching (streams of mixed events, the Section 4.4 scenario,
   chunked through the hybrid engine ``repro.core.hybrid`` so a whole
   chunk costs one jitted dispatch);
+* stream validation (op tags, vertex bounds, presence/absence -- the
+  batched engine treats unknown tags as padding inside the trace, so
+  corrupted streams MUST be rejected host-side before dispatch);
+* distributed updates: ``mesh=`` swaps every build/update engine for
+  the edge-sharded variants of ``repro.core.distributed
+  .make_distributed_updater`` (same algorithms, relaxation sharded over
+  the mesh's edge axis) while this driver's capacity pre-provision and
+  overflow-retry machinery runs unchanged, re-padding the edge arrays
+  to the shard count after every capacity change;
 * checkpointable state (arrays only -- see ``repro.train.checkpoint``).
 
 This mirrors what the C++ artifact's main loop does, lifted into a
@@ -59,19 +68,37 @@ class UpdateStats:
 
 
 class DynamicSPC:
-    """Maintains (graph, SPC-Index) under a stream of topology events."""
+    """Maintains (graph, SPC-Index) under a stream of topology events.
+
+    With ``mesh=`` the service runs its build and every update through
+    the edge-sharded engines (``repro.core.distributed``): the edge list
+    is partitioned over ``edge_axis``, labels stay replicated, and the
+    public contract (queries, events, overflow-retry, checkpointing) is
+    unchanged -- differential tests hold the two modes bit-identical.
+    """
 
     def __init__(self, n: int, edges: Sequence[Tuple[int, int]] = (),
-                 l_cap: int = 32, cap_e: int | None = None) -> None:
+                 l_cap: int = 32, cap_e: int | None = None, *,
+                 mesh=None, edge_axis: str = "model") -> None:
         self.stats = UpdateStats()
         self._engine = None
-        self.graph = G.from_edges(n, edges, cap_e)
+        self._updater = None
+        if mesh is not None:
+            from repro.core.distributed import make_distributed_updater
+            self._updater = make_distributed_updater(mesh, edge_axis)
+        self.graph = self._pad_for_mesh(G.from_edges(n, edges, cap_e))
         self.index = self._build(l_cap)
+
+    def _pad_for_mesh(self, g: Graph) -> Graph:
+        """Keep cap_e divisible over the edge axis (no-op off-mesh)."""
+        return self._updater.pad(g) if self._updater is not None else g
 
     # -- construction with overflow-retry ---------------------------------
     def _build(self, l_cap: int) -> SPCIndex:
+        build = (self._updater.build_index if self._updater is not None
+                 else build_index)
         while True:
-            idx = build_index(self.graph, l_cap)
+            idx = build(self.graph, l_cap)
             if int(idx.overflow) == 0:
                 return idx
             l_cap *= 2
@@ -121,9 +148,11 @@ class DynamicSPC:
         self._check_edge_ids(a, b)
         if bool(G.has_edge(self.graph, a, b)):
             raise ValueError(f"edge ({a},{b}) already present")
-        self.graph = G.ensure_capacity(self.graph, 2)
+        self.graph = self._pad_for_mesh(G.ensure_capacity(self.graph, 2))
+        inc = (self._updater.inc_spc if self._updater is not None
+               else inc_spc)
         while True:
-            g2, idx2 = inc_spc(self.graph, self.index, a, b)
+            g2, idx2 = inc(self.graph, self.index, a, b)
             if int(idx2.overflow) == 0:
                 self.graph, self.index = g2, idx2
                 break
@@ -144,8 +173,12 @@ class DynamicSPC:
             self.index = L.reset_isolated_row(self.index, hi)
             self.stats.isolated_fast_path += 1
         else:
+            # the isolated case was excluded host-side above, so both
+            # modes jit the same plain dec_spc body (shared compile cache)
+            dec = (self._updater.dec_spc if self._updater is not None
+                   else dec_spc)
             while True:
-                g2, idx2 = dec_spc(self.graph, self.index, a, b)
+                g2, idx2 = dec(self.graph, self.index, a, b)
                 if int(idx2.overflow) == 0:
                     self.graph, self.index = g2, idx2
                     break
@@ -162,10 +195,13 @@ class DynamicSPC:
             self._check_edge_ids(a, b)
             if bool(G.has_edge(self.graph, a, b)):
                 raise ValueError(f"edge ({a},{b}) already present")
-        self.graph = G.ensure_capacity(self.graph, 2 * len(edges))
+        self.graph = self._pad_for_mesh(
+            G.ensure_capacity(self.graph, 2 * len(edges)))
+        batch = (self._updater.inc_spc_batch if self._updater is not None
+                 else inc_spc_batch)
         arr = jnp.asarray(np.asarray(edges, dtype=np.int32))
         while True:
-            g2, idx2 = inc_spc_batch(self.graph, self.index, arr)
+            g2, idx2 = batch(self.graph, self.index, arr)
             if int(idx2.overflow) == 0:
                 self.graph, self.index = g2, idx2
                 break
@@ -199,23 +235,63 @@ class DynamicSPC:
         live = (src != self.n) & (src < dst)
         return {(int(a), int(b)) for a, b in zip(src[live], dst[live])}
 
+    def _normalize_events(self, events) -> list:
+        """Host-side op-tag validation (first line of defense).
+
+        The batched engine maps any unknown tag to its padding branch
+        inside the trace -- it *cannot* raise mid-scan -- so a corrupted
+        stream would silently drop updates.  Tags are therefore resolved
+        here: ``'+'``/``'-'`` (the public symbols) and the engine codes
+        ``OP_INSERT``/``OP_DELETE`` are accepted; anything else raises a
+        ``ValueError`` naming the first bad row.
+        """
+        from repro.core.hybrid import OP_DELETE, OP_INSERT
+        out = []
+        for i, ev in enumerate(events):
+            try:
+                op, a, b = ev
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"event row {i}: want an (op, a, b) triple, got {ev!r}"
+                ) from None
+            if isinstance(op, (int, np.integer)) and \
+                    not isinstance(op, bool):
+                if op == OP_INSERT:
+                    op = "+"
+                elif op == OP_DELETE:
+                    op = "-"
+            if op not in ("+", "-"):
+                raise ValueError(
+                    f"unknown event op {op!r} at row {i}: want '+'/'-' or "
+                    f"OP_INSERT/OP_DELETE (the batched engine would "
+                    f"silently treat this row as padding)")
+            try:
+                out.append((op, int(a), int(b)))
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"event row {i}: non-integer endpoint in "
+                    f"({a!r}, {b!r})") from None
+        return out
+
     def _validate_events(self, events) -> None:
         """Host-side simulation of the stream against the current edge
         set: the batched engine has no way to raise mid-scan, so the
         per-event error semantics are enforced up front."""
         present = self._edge_set()
-        for op, a, b in events:
-            if op not in ("+", "-"):
-                raise ValueError(f"unknown event {op!r}")
-            self._check_edge_ids(a, b)
+        for i, (op, a, b) in enumerate(events):
+            try:
+                self._check_edge_ids(a, b)
+            except ValueError as e:
+                raise ValueError(f"event row {i}: {e}") from None
             key = (a, b) if a < b else (b, a)
             if op == "+":
                 if key in present:
-                    raise ValueError(f"edge {key} already present")
+                    raise ValueError(
+                        f"event row {i}: edge {key} already present")
                 present.add(key)
             else:
                 if key not in present:
-                    raise ValueError(f"edge {key} not present")
+                    raise ValueError(f"event row {i}: edge {key} not present")
                 present.discard(key)
 
     def apply_events(self, events: Iterable[Tuple[str, int, int]],
@@ -232,19 +308,19 @@ class DynamicSPC:
         falls back to one jitted dispatch per event -- kept as the
         differential-testing and benchmark baseline.
         """
-        events = [(op, int(a), int(b)) for op, a, b in events]
+        events = self._normalize_events(events)
         if batch_size is None or batch_size <= 1:
             for op, a, b in events:
                 if op == "+":
                     self.insert_edge(a, b)
-                elif op == "-":
-                    self.delete_edge(a, b)
                 else:
-                    raise ValueError(f"unknown event {op!r}")
+                    self.delete_edge(a, b)
             return
 
         from repro.core.hybrid import OP_DELETE, OP_INSERT, hyb_spc_batch
         self._validate_events(events)
+        hyb = (self._updater.hyb_spc_batch if self._updater is not None
+               else hyb_spc_batch)
         code = {"+": OP_INSERT, "-": OP_DELETE}
         for lo in range(0, len(events), batch_size):
             chunk = events[lo:lo + batch_size]
@@ -253,13 +329,14 @@ class DynamicSPC:
                 arr[i] = (code[op], a, b)
             n_ins = sum(1 for op, _, _ in chunk if op == "+")
             cap_before = self.graph.cap_e
-            self.graph = G.ensure_capacity(self.graph, 2 * n_ins)
+            self.graph = self._pad_for_mesh(
+                G.ensure_capacity(self.graph, 2 * n_ins))
             if self.graph.cap_e != cap_before:
                 self.stats.edge_regrows += 1
             g0, idx0 = self.graph, self.index  # pre-chunk snapshot
             ev = jnp.asarray(arr)
             while True:
-                g2, idx2 = hyb_spc_batch(self.graph, self.index, ev)
+                g2, idx2 = hyb(self.graph, self.index, ev)
                 if int(idx2.overflow) == 0:
                     self.graph, self.index = g2, idx2
                     break
@@ -288,17 +365,23 @@ class DynamicSPC:
         }
 
     @classmethod
-    def from_state_dict(cls, n: int, state: dict) -> "DynamicSPC":
+    def from_state_dict(cls, n: int, state: dict, *,
+                        mesh=None, edge_axis: str = "model") -> "DynamicSPC":
         obj = cls.__new__(cls)
-        obj.graph = Graph(src=jnp.asarray(state["graph.src"]),
-                          dst=jnp.asarray(state["graph.dst"]),
-                          m2=jnp.asarray(state["graph.m2"]), n=n)
+        obj.stats = UpdateStats()
+        obj._engine = None
+        obj._updater = None
+        if mesh is not None:
+            from repro.core.distributed import make_distributed_updater
+            obj._updater = make_distributed_updater(mesh, edge_axis)
+        obj.graph = obj._pad_for_mesh(
+            Graph(src=jnp.asarray(state["graph.src"]),
+                  dst=jnp.asarray(state["graph.dst"]),
+                  m2=jnp.asarray(state["graph.m2"]), n=n))
         obj.index = SPCIndex(
             hub=jnp.asarray(state["index.hub"]),
             dist=jnp.asarray(state["index.dist"]),
             cnt=jnp.asarray(state["index.cnt"]),
             size=jnp.asarray(state["index.size"]),
             overflow=jnp.int32(0), n=n)
-        obj.stats = UpdateStats()
-        obj._engine = None
         return obj

@@ -44,7 +44,10 @@ Events are a tagged ``int32[B, 3]`` array of ``(op, a, b)`` rows:
 
 The caller (``repro.core.dynamic.DynamicSPC.apply_events``) guarantees
 edge-slot capacity for all insertions in the batch and validates the
-stream host-side (no duplicate inserts, no deletes of absent edges).
+stream host-side (op tags resolved with the first bad row named --
+unknown tags hit the padding branch *inside the trace* and would
+otherwise silently drop updates -- plus no duplicate inserts, no
+deletes of absent edges).
 Label-capacity overflow anywhere in the batch accumulates in the
 returned index's ``overflow`` counter; because every op is functional,
 the driver recovers by re-padding the *pre-batch* snapshot and replaying
@@ -56,22 +59,18 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.bfs import RelaxFn
 from repro.core.decremental import dec_spc_step
 from repro.core.graph import Graph
-from repro.core.incremental import inc_spc
+from repro.core.incremental import _inc_spc
 from repro.core.labels import SPCIndex
 
 OP_INSERT = 1
 OP_DELETE = 2
 
 
-@jax.jit
-def hyb_spc_batch(g: Graph, idx: SPCIndex,
-                  events: jax.Array) -> tuple[Graph, SPCIndex]:
-    """Apply a tagged ``(op, a, b)`` int32[B, 3] event stream in stream
-    order inside ONE jitted ``lax.scan`` (see module docstring for the
-    contract and the correctness argument)."""
-
+def _hyb_spc_batch(g: Graph, idx: SPCIndex, events: jax.Array,
+                   relax_fn: RelaxFn | None = None) -> tuple[Graph, SPCIndex]:
     def step(carry, ev):
         g, idx = carry
         op, a, b = ev[0], ev[1], ev[2]
@@ -81,11 +80,11 @@ def hyb_spc_batch(g: Graph, idx: SPCIndex,
 
         def ins(args):
             g, idx = args
-            return inc_spc.__wrapped__(g, idx, a, b)
+            return _inc_spc(g, idx, a, b, relax_fn)
 
         def dele(args):
             g, idx = args
-            return dec_spc_step(g, idx, a, b)
+            return dec_spc_step(g, idx, a, b, relax_fn)
 
         known = (op == OP_INSERT) | (op == OP_DELETE)
         branch = jnp.where((a == b) | ~known, 0,
@@ -96,3 +95,10 @@ def hyb_spc_batch(g: Graph, idx: SPCIndex,
     (g, idx), _ = jax.lax.scan(step, (g, idx),
                                events.astype(jnp.int32))
     return g, idx
+
+
+#: Apply a tagged ``(op, a, b)`` int32[B, 3] event stream in stream
+#: order inside ONE jitted ``lax.scan`` (see module docstring for the
+#: contract and the correctness argument).  ``relax_fn`` (static) swaps
+#: in the edge-sharded relaxation for distributed replay.
+hyb_spc_batch = jax.jit(_hyb_spc_batch, static_argnames=("relax_fn",))

@@ -12,6 +12,12 @@ DESIGN.md for the argument):
   each vertex's own (h, .) entry is read before it is written.
 * All label writes of one BFS are applied as a single masked bulk
   upsert over the label matrices.
+
+Every entry point accepts a ``relax_fn`` (static under jit): the
+single-device default relaxes the whole edge list, the distributed
+engines (``repro.core.distributed.make_distributed_updater``) pass the
+edge-sharded shard_map relaxation so the same algorithm runs over an
+edge-partitioned mesh.
 """
 
 from __future__ import annotations
@@ -20,13 +26,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import graph as G
-from repro.core.bfs import pruned_spc_bfs
+from repro.core.bfs import RelaxFn, pruned_spc_bfs
 from repro.core.graph import Graph
 from repro.core.labels import SPCIndex, bulk_upsert
 from repro.core.query import one_to_all
 
 
-def _inc_update(g: Graph, idx: SPCIndex, h, va, vb) -> SPCIndex:
+def _inc_update(g: Graph, idx: SPCIndex, h, va, vb,
+                relax_fn: RelaxFn | None = None) -> SPCIndex:
     """Algorithm 3, bulk form."""
     # Seed from the (h, d, c) entry of L(va):
     eq_a = idx.hub[va] == h
@@ -34,7 +41,8 @@ def _inc_update(g: Graph, idx: SPCIndex, h, va, vb) -> SPCIndex:
     d0 = idx.dist[va, pos] + 1
     c0 = idx.cnt[va, pos]
     d_full, _ = one_to_all(idx, h)  # SpcQuery(h, v) for every v
-    res = pruned_spc_bfs(g, vb, d0, c0, dbar=d_full, rank_floor=h)
+    res = pruned_spc_bfs(g, vb, d0, c0, dbar=d_full, rank_floor=h,
+                         relax_fn=relax_fn)
     # Existing (h, ., .) entries (pre-update values):
     eq = idx.hub == h
     has = jnp.any(eq, axis=1)
@@ -47,13 +55,9 @@ def _inc_update(g: Graph, idx: SPCIndex, h, va, vb) -> SPCIndex:
     return bulk_upsert(idx, h, res.dist, c_new, res.keep)
 
 
-@jax.jit
-def inc_spc(g: Graph, idx: SPCIndex, a, b) -> tuple[Graph, SPCIndex]:
-    """Algorithm 2: insert edge (a, b) and repair the index.
-
-    The caller guarantees the edge is absent and capacity is available
-    (``repro.core.dynamic`` handles both plus overflow-retry).
-    """
+def _inc_spc(g: Graph, idx: SPCIndex, a, b,
+             relax_fn: RelaxFn | None = None) -> tuple[Graph, SPCIndex]:
+    """Algorithm 2 (traced body; see :func:`inc_spc`)."""
     a = jnp.asarray(a, jnp.int32)
     b = jnp.asarray(b, jnp.int32)
     n = idx.n
@@ -73,11 +77,11 @@ def inc_spc(g: Graph, idx: SPCIndex, a, b) -> tuple[Graph, SPCIndex]:
         valid = first[k] & (h < n)
         idx = jax.lax.cond(
             valid & in_a[h] & (h <= b),
-            lambda i: _inc_update(g2, i, h, a, b),
+            lambda i: _inc_update(g2, i, h, a, b, relax_fn),
             lambda i: i, idx)
         idx = jax.lax.cond(
             valid & in_b[h] & (h <= a),
-            lambda i: _inc_update(g2, i, h, b, a),
+            lambda i: _inc_update(g2, i, h, b, a, relax_fn),
             lambda i: i, idx)
         return idx
 
@@ -85,27 +89,21 @@ def inc_spc(g: Graph, idx: SPCIndex, a, b) -> tuple[Graph, SPCIndex]:
     return g2, idx
 
 
-@jax.jit
-def inc_spc_batch(g: Graph, idx: SPCIndex,
-                  edges: jax.Array) -> tuple[Graph, SPCIndex]:
-    """Batched IncSPC: apply ``edges`` int32[B, 2] sequentially inside
-    ONE jitted call (beyond-paper: amortizes the per-update dispatch
-    overhead that dominates small updates -- cf. BatchHL's motivation
-    for distance labeling [Farhan et al., SIGMOD'22], but kept exactly
-    sequential so ESPC holds after every prefix).
+#: Algorithm 2: insert edge (a, b) and repair the index.  The caller
+#: guarantees the edge is absent and capacity is available
+#: (``repro.core.dynamic`` handles both plus overflow-retry).
+inc_spc = jax.jit(_inc_spc, static_argnames=("relax_fn",))
 
-    Rows with a == b are skipped (use as padding for fixed batch
-    shapes).  Caller guarantees capacity for 2B directed slots and
-    absence of the inserted edges.
-    """
 
+def _inc_spc_batch(g: Graph, idx: SPCIndex, edges: jax.Array,
+                   relax_fn: RelaxFn | None = None) -> tuple[Graph, SPCIndex]:
     def step(carry, edge):
         g, idx = carry
         a, b = edge[0], edge[1]
 
         def apply(args):
             g, idx = args
-            return inc_spc.__wrapped__(g, idx, a, b)
+            return _inc_spc(g, idx, a, b, relax_fn)
 
         g, idx = jax.lax.cond(a != b, apply, lambda x: x, (g, idx))
         return (g, idx), None
@@ -113,3 +111,13 @@ def inc_spc_batch(g: Graph, idx: SPCIndex,
     (g, idx), _ = jax.lax.scan(step, (g, idx),
                                edges.astype(jnp.int32))
     return g, idx
+
+
+#: Batched IncSPC: apply ``edges`` int32[B, 2] sequentially inside ONE
+#: jitted call (beyond-paper: amortizes the per-update dispatch overhead
+#: that dominates small updates -- cf. BatchHL's motivation for distance
+#: labeling [Farhan et al., SIGMOD'22], but kept exactly sequential so
+#: ESPC holds after every prefix).  Rows with a == b are skipped (use as
+#: padding for fixed batch shapes).  Caller guarantees capacity for 2B
+#: directed slots and absence of the inserted edges.
+inc_spc_batch = jax.jit(_inc_spc_batch, static_argnames=("relax_fn",))

@@ -4,11 +4,28 @@ from __future__ import annotations
 
 import os
 
+import jax
 import jax.numpy as jnp
 
-# Kernels run in interpret mode on CPU (this container) and compiled mode
-# on TPU.  REPRO_PALLAS_INTERPRET=0 switches to compiled lowering.
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Resolve a Pallas ``interpret`` flag at dispatch time.
+
+    Priority: explicit argument > ``REPRO_PALLAS_INTERPRET`` env var >
+    backend default (compiled only on TPU, the one backend with a Mosaic
+    lowering).  A compiled-mode request on a non-TPU backend is clamped
+    back to interpret mode: ``pallas_call(interpret=False)`` raises on
+    CPU rather than falling back, which used to break the serving
+    engine's explicit ``route="pallas"`` off-TPU.
+    """
+    if interpret is None:
+        env = os.environ.get("REPRO_PALLAS_INTERPRET")
+        interpret = (env != "0") if env is not None else None
+    on_tpu = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = not on_tpu
+    if not interpret and not on_tpu:
+        interpret = True
+    return bool(interpret)
 
 
 def ceil_div(a: int, b: int) -> int:

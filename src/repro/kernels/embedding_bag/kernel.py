@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import INTERPRET
+from repro.kernels.common import resolve_interpret
 
 
 def _kernel(ids_ref, table_ref, o_ref, acc_ref):
@@ -51,8 +51,7 @@ def embedding_bag_pallas(ids, table, *, interpret: bool | None = None):
     Returns:
       float[B, D].
     """
-    if interpret is None:
-        interpret = INTERPRET
+    interpret = resolve_interpret(interpret)
     b, s = ids.shape
     v1, d = table.shape
     ids = jnp.minimum(ids.astype(jnp.int32), v1 - 1)

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import INTERPRET, ceil_div, pad_to
+from repro.kernels.common import ceil_div, pad_to, resolve_interpret
 
 NEG_INF = -1e30
 
@@ -77,8 +77,7 @@ def flash_decode_pallas(q, k, v, lengths, *, block_bh: int = 8,
     Returns:
       float[BH, D] attention outputs.
     """
-    if interpret is None:
-        interpret = INTERPRET
+    interpret = resolve_interpret(interpret)
     bh, d = q.shape
     s_len = k.shape[1]
     scale = 1.0 / (d ** 0.5)

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import INTERPRET, ceil_div, pad_to
+from repro.kernels.common import ceil_div, pad_to, resolve_interpret
 
 
 def _kernel(dst_ref, val_ref, out_ref, acc_ref, *, block_n: int):
@@ -69,8 +69,7 @@ def segment_matmul_pallas(vals, dst, num_segments: int, *,
     Returns:
       float[num_segments, D].
     """
-    if interpret is None:
-        interpret = INTERPRET
+    interpret = resolve_interpret(interpret)
     e, d = vals.shape
     ep = ceil_div(e, block_e) * block_e
     np_ = ceil_div(num_segments, block_n) * block_n

@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.common import INTERPRET
 from repro.kernels.segment_matmul.kernel import segment_matmul_pallas
 from repro.kernels.segment_matmul.ref import segment_matmul_ref
 

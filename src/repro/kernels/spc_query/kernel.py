@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import INTERPRET, ceil_div, pad_to
+from repro.kernels.common import ceil_div, pad_to, resolve_interpret
 
 INF = 1 << 28
 _BIG = INF * 2
@@ -61,8 +61,7 @@ def spc_query_pallas(hub_s, dist_s, cnt_s, hub_t, dist_t, cnt_t,
     Returns:
       (dist int32[B], count float32[B]); disconnected pairs -> (INF, 0).
     """
-    if interpret is None:
-        interpret = INTERPRET
+    interpret = resolve_interpret(interpret)
     b, l = hub_s.shape
     bp = ceil_div(b, block_b) * block_b
     args = [pad_to(x, block_b, 0, value=pad) for x, pad in (

@@ -5,17 +5,23 @@ has no int64), which represents integers exactly only up to
 ``EXACT_COUNT_MAX = 2^24``.  ``index_query_batch`` therefore checks a
 cheap per-row bound (``sum(cnt_s) * sum(cnt_t)``, which dominates the
 true count and every fp32 partial sum -- see
-``repro.core.query.count_upper_bound_rows``) and, when any row might
-exceed the bound, answers the batch on the int64 sorted-merge path
-instead of returning silently wrong counts.  ``exact=False`` restores
-the raw fp32 kernel contract for benchmarking.
+``repro.core.query.count_upper_bound_rows``) and answers every row that
+might exceed it on the int64 sorted-merge path instead of returning
+silently wrong counts.  The bound is enforced *per row*: a mixed batch
+is partitioned host-side so the provably-exact rows still take the
+kernel and only the unprovable rows pay the merge (route
+``"pallas+merge"``); a batch where no row is provably exact degrades to
+the all-merge fallback (route ``"pallas->merge"``).  ``exact=False``
+restores the raw fp32 kernel contract for benchmarking.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.graph import INF
 from repro.core.labels import SPCIndex
 from repro.core.query import (count_upper_bound_rows, gather_rows,
                               merge_rows_jit)
@@ -39,16 +45,15 @@ def prep_rows(idx: SPCIndex, s, t):
 
 
 @jax.jit
-def gather_rows_with_bound(idx: SPCIndex, s, t):
-    """One dispatch: kernel-ready rows + the batch's exactness bound.
+def gather_rows_with_bounds(idx: SPCIndex, s, t):
+    """One dispatch: kernel-ready rows + the per-row exactness bounds.
 
     The rows feed *either* the Pallas kernel or the int64 merge fallback
     (``merge_rows`` tolerates the re-padded t side), so the host-side
-    route decision on the bound costs one gather and one scalar sync.
+    per-row route decision costs one gather and one [B]-vector sync.
     """
     rows = prep_rows(idx, s, t)
-    bound = jnp.max(count_upper_bound_rows(rows[2], rows[5]), initial=0.0)
-    return rows, bound
+    return rows, count_upper_bound_rows(rows[2], rows[5])
 
 
 def rows_query_pallas(hub_s, dist_s, cnt_s, hub_t, dist_t, cnt_t, *,
@@ -62,21 +67,78 @@ def rows_query_pallas(hub_s, dist_s, cnt_s, hub_t, dist_t, cnt_t, *,
         block_b=block_b, interpret=interpret)
 
 
+def _pad_rows(rows, to: int, n: int):
+    """Pad gathered rows out to ``to`` with all-sentinel label rows.
+
+    Pad pairs intersect nowhere (s hubs = n, t hubs = n + 1), so both
+    evaluation paths answer (INF, 0) for them; callers slice them off.
+    """
+    k = rows[0].shape[0]
+    if k == to:
+        return rows
+    vals = (n, int(INF), 0, n + 1, int(INF), 0)
+    return tuple(
+        jnp.pad(r, ((0, to - k), (0, 0)), constant_values=v)
+        for r, v in zip(rows, vals))
+
+
+def _pow2_at_least(k: int, floor: int = 8) -> int:
+    p = floor
+    while p < k:
+        p *= 2
+    return p
+
+
 def exact_query_batch(idx: SPCIndex, s, t, *, block_b: int = 128,
-                      interpret: bool | None = None):
+                      interpret: bool | None = None,
+                      real_rows: int | None = None):
     """THE exactness-routed kernel call, shared by ``index_query_batch``
     and the serving engine: gather once, check the per-row bound, run
-    the fp32 kernel only when provably exact.
+    the fp32 kernel on every row that is provably exact under it.
+
+    ``real_rows`` (optional) marks the tail beyond it as padding whose
+    answers the caller discards -- the serving engine bucket-pads with
+    dump-row pairs (bound 0, trivially exact), and those must not drag
+    an all-inexact real batch into a pointless split.  The route is
+    decided on the real rows only; padding rides with whichever
+    partition avoids an extra dispatch.
 
     Returns (dist int32[B], count int64[B], route) with route one of
-    ``"pallas"`` / ``"pallas->merge"`` (the int64 fallback).
+    ``"pallas"`` (all rows exact), ``"pallas+merge"`` (batch partitioned
+    by the per-row bound) or ``"pallas->merge"`` (no row provably exact;
+    whole batch on the int64 fallback).
     """
-    rows, bound = gather_rows_with_bound(idx, s, t)
-    if float(bound) >= EXACT_COUNT_MAX:
+    rows, bounds = gather_rows_with_bounds(idx, s, t)
+    inexact = np.asarray(bounds) >= EXACT_COUNT_MAX  # one host sync
+    real = inexact if real_rows is None else inexact[:real_rows]
+    if not real.any():
+        d, c = rows_query_pallas(*rows, block_b=block_b,
+                                 interpret=interpret)
+        return d, c.astype(jnp.int64), "pallas"
+    if real.all():
         d, c = merge_rows_jit(*rows)
         return d, c, "pallas->merge"
-    d, c = rows_query_pallas(*rows, block_b=block_b, interpret=interpret)
-    return d, c.astype(jnp.int64), "pallas"
+    # Mixed batch: partition on the per-row bound so exact rows keep the
+    # kernel route.  Partitions are padded to power-of-two row counts so
+    # the merge/kernel compile caches stay bounded regardless of how the
+    # split lands; results scatter back host-side into stream order.
+    ex = np.nonzero(~inexact)[0]
+    iex = np.nonzero(inexact)[0]
+    rows_ex = _pad_rows(tuple(r[ex] for r in rows),
+                        _pow2_at_least(len(ex)), idx.n)
+    rows_in = _pad_rows(tuple(r[iex] for r in rows),
+                        _pow2_at_least(len(iex)), idx.n)
+    d_ex, c_ex = rows_query_pallas(*rows_ex, block_b=block_b,
+                                   interpret=interpret)
+    d_in, c_in = merge_rows_jit(*rows_in)
+    b = inexact.shape[0]
+    d = np.empty(b, np.int32)
+    c = np.empty(b, np.int64)
+    d[ex] = np.asarray(d_ex)[: len(ex)]
+    c[ex] = np.asarray(c_ex.astype(jnp.int64))[: len(ex)]
+    d[iex] = np.asarray(d_in)[: len(iex)]
+    c[iex] = np.asarray(c_in)[: len(iex)]
+    return jnp.asarray(d), jnp.asarray(c), "pallas+merge"
 
 
 def index_query_batch(idx: SPCIndex, s, t, *, block_b: int = 128,
@@ -84,11 +146,10 @@ def index_query_batch(idx: SPCIndex, s, t, *, block_b: int = 128,
     """Batched (s, t) queries against the label matrices.
 
     With ``exact=True`` (default) the per-row count bound is checked
-    host-side: batches where every row is provably < 2^24 run through
-    the fp32 kernel, anything else falls back to the int64 sorted-merge
-    path; either way the result is (dist int32[B], count int64[B]).
-    ``exact=False`` skips the check and returns the kernel's raw
-    (int32[B], float32[B]).
+    host-side: rows provably < 2^24 run through the fp32 kernel, the
+    rest fall back to the int64 sorted-merge path; either way the result
+    is (dist int32[B], count int64[B]).  ``exact=False`` skips the check
+    and returns the kernel's raw (int32[B], float32[B]).
     """
     s = jnp.asarray(s)
     t = jnp.asarray(t)

@@ -24,9 +24,14 @@ that the *engineered* path instead of three diverging ones:
              O(L^2) arithmetic of the kernel, in jnp)
    ========  ==========================================  ===========
 
-   A ``pallas`` request whose batch fails the bound is answered on the
-   merge path and recorded as ``pallas->merge`` in the stats -- the
-   silent-overflow bug this engine exists to close.
+   The exactness bound is enforced per row: a mixed batch is
+   partitioned host-side so provably-exact rows still take the kernel
+   while the rest merge in int64, recorded as ``pallas+merge``; a batch
+   with no provably-exact row degrades whole to the merge path,
+   recorded as ``pallas->merge`` -- the silent-overflow bug this engine
+   exists to close.  ``interpret`` defaults from the backend at dispatch
+   time (compiled only on TPU), so an explicit ``route="pallas"`` works
+   on CPU/GPU hosts too.
 4. **Shard.**  ``QueryEngine.sharded`` wraps
    ``repro.core.distributed.make_sharded_query`` (index replicated,
    batch split over mesh axes) with the same pad-and-slice handling so
@@ -148,11 +153,14 @@ class QueryEngine:
             d, c = _serve_merge(idx, s, t)
         else:
             # The shared exactness-routed kernel call: gathers once,
-            # syncs one bound scalar, falls back to int64 merge when a
-            # row could exceed 2^24 on the fp32 path.
+            # syncs the per-row bound vector, and partitions the batch
+            # so only rows that could exceed 2^24 on the fp32 path pay
+            # the int64 merge ("pallas" / "pallas+merge" /
+            # "pallas->merge").
             d, c, chosen = exact_query_batch(idx, s, t,
                                              block_b=self.block_b,
-                                             interpret=self.interpret)
+                                             interpret=self.interpret,
+                                             real_rows=b)
         self.stats.count(chosen, b)
         return d[:b], c[:b]
 

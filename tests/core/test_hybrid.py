@@ -181,3 +181,45 @@ def test_apply_events_validates_stream():
     svc.apply_events([("-", 0, 1), ("+", 0, 1), ("+", 0, 4), ("-", 0, 4)],
                      batch_size=4)
     assert svc.stats.batches == 1
+
+
+def test_apply_events_rejects_bad_op_tags_naming_row():
+    """The batched engine maps unknown op tags to its padding branch
+    inside the trace (it cannot raise mid-scan), so a corrupted stream
+    would silently drop updates; the driver must reject them host-side,
+    naming the first bad row -- on BOTH replay paths."""
+    n = 8
+    svc = DynamicSPC(n, [(0, 1), (1, 2)], l_cap=8)
+    bad = [("+", 0, 3), (9, 1, 4), ("-", 0, 1)]  # row 1: engine pad branch
+    for bs in (4, None):
+        with pytest.raises(ValueError, match=r"row 1"):
+            svc.apply_events(bad, batch_size=bs)
+        # transactional even on the per-event path: op tags are resolved
+        # before any event is applied
+        assert svc.stats.inserts == 0 and svc.stats.deletions == 0
+    with pytest.raises(ValueError, match=r"row 0"):
+        svc.apply_events([(None, 0, 3)])
+    # bool/float tags must not coerce through int equality (True == 1)
+    with pytest.raises(ValueError, match=r"row 0"):
+        svc.apply_events([(True, 0, 3)])
+    with pytest.raises(ValueError, match=r"row 0"):
+        svc.apply_events([(2.0, 0, 1)])
+    with pytest.raises(ValueError, match=r"row 2"):
+        svc.apply_events([("+", 0, 3), ("-", 1, 2), ("*", 2, 5)])
+    with pytest.raises(ValueError, match=r"row 1.*endpoint"):
+        svc.apply_events([("+", 0, 3), ("+", "x", 4)])
+    assert svc._edge_set() == {(0, 1), (1, 2)}  # nothing applied
+
+
+def test_apply_events_accepts_engine_op_codes():
+    """OP_INSERT/OP_DELETE integer tags (the engine encoding) are
+    accepted and equivalent to the '+'/'-' symbols."""
+    n = 8
+    edges = [(0, 1), (1, 2), (2, 3)]
+    sym = DynamicSPC(n, edges, l_cap=8)
+    num = DynamicSPC(n, edges, l_cap=8)
+    sym.apply_events([("+", 0, 4), ("-", 1, 2), ("+", 1, 5)], batch_size=4)
+    num.apply_events([(OP_INSERT, 0, 4), (OP_DELETE, 1, 2),
+                      (int(np.int32(OP_INSERT)), 1, 5)], batch_size=4)
+    assert to_ref(num.index).labels == to_ref(sym.index).labels
+    assert num._edge_set() == sym._edge_set()

@@ -5,7 +5,9 @@ isolated vertices -- plus bucketing, routing and overflow-fallback
 behavior."""
 
 import dataclasses
+import os
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -123,6 +125,95 @@ def test_pallas_overflow_falls_back_to_int64(dynamic_service):
     # a small-count batch on the same engine still takes the kernel
     d, c = eng.query_batch(dynamic_service.index, [0], [1], route="pallas")
     assert "pallas" in eng.stats.routes
+
+
+def test_mixed_exactness_batch_splits_routes(dynamic_service):
+    """A batch mixing provably-exact and possibly-inexact rows must be
+    partitioned on the per-row bound -- exact rows keep the kernel, the
+    rest merge in int64 -- instead of dropping the whole batch to the
+    merge fallback (ROADMAP "mixed-exactness batches")."""
+    big = 2 ** 24 + 1  # not representable in fp32
+    ref = R.RefSPCIndex(3)
+    ref.labels[0] = [(0, 0, 1)]
+    ref.labels[1] = [(0, 1, big), (1, 0, 1)]
+    ref.labels[2] = [(0, 1, 1), (2, 0, 1)]
+    idx = from_ref(ref, l_cap=4)
+    eng = QueryEngine()
+    # rows: (0,2) exact, (0,1) inexact (bound big+..), (2,2) exact self
+    d, c = eng.query_batch(idx, [0, 0, 2], [2, 1, 2], route="pallas")
+    assert [int(x) for x in d] == [1, 1, 0]
+    assert [int(x) for x in c] == [1, big, 1]  # inexact row still exact int64
+    assert eng.stats.routes == {"pallas+merge": 1}
+    # the bucket's dump-row padding (bound 0) must NOT turn an
+    # all-inexact real batch into a split: stays the whole-batch fallback
+    d, c = eng.query_batch(idx, [0], [1], route="pallas")
+    assert (int(d[0]), int(c[0])) == (1, big)
+    assert eng.stats.routes == {"pallas+merge": 1, "pallas->merge": 1}
+
+
+def test_pallas_route_works_on_cpu_backend(dynamic_service, monkeypatch):
+    """Regression: ``route="pallas"`` with ``interpret=None`` must not
+    dispatch the compiled Mosaic lowering off-TPU.  The env knob that
+    requests compiled mode on the TPU fleet is clamped back to interpret
+    mode on backends without a lowering, at dispatch time."""
+    from repro.kernels.common import resolve_interpret
+
+    assert jax.default_backend() != "tpu"  # this container
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    assert resolve_interpret(None) is True   # backend default
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert resolve_interpret(None) is True   # compiled request clamped
+    assert resolve_interpret(False) is True  # explicit arg clamped too
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert resolve_interpret(None) is True
+    # end-to-end under the poison env: explicit pallas route still answers
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    svc = dynamic_service
+    eng = QueryEngine(route="pallas")
+    s = list(range(8))
+    d, c = eng.query_batch(svc.index, s, s)
+    assert [int(x) for x in d] == [0] * 8
+    assert [int(x) for x in c] == [1] * 8
+    assert "pallas" in eng.stats.routes
+
+
+def test_pallas_route_compiled_env_subprocess():
+    """True end-to-end regression for the interpret default: a process
+    *started* with REPRO_PALLAS_INTERPRET=0 on a CPU backend used to
+    crash inside ``pallas_call`` on the explicit pallas route."""
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent(
+        """
+        import numpy as np
+        from repro.core.dynamic import DynamicSPC
+        from repro.serve import QueryEngine
+
+        svc = DynamicSPC(6, [(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)],
+                         l_cap=8)
+        eng = QueryEngine(route="pallas")
+        d, c = eng.query_batch(svc.index, [0, 1, 5], [3, 4, 5])
+        dm, cm = eng.query_batch(svc.index, [0, 1, 5], [3, 4, 5],
+                                 route="merge")
+        assert [int(x) for x in d] == [int(x) for x in dm]
+        assert [int(x) for x in c] == [int(x) for x in cm]
+        assert "pallas" in eng.stats.routes
+        print("PALLAS_CPU_OK")
+        """
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["REPRO_PALLAS_INTERPRET"] = "0"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+        timeout=600,
+    )
+    assert "PALLAS_CPU_OK" in proc.stdout, proc.stderr[-3000:]
 
 
 def test_sharded_serving_single_device(dynamic_service):
