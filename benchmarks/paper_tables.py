@@ -23,6 +23,10 @@ configurable size and reports the same *quantities* the paper reports.
                engines (``make_distributed_updater``) replaying the
                SAME mixed stream; needs forced host devices for a real
                mesh (``benchmarks.run`` sets XLA_FLAGS when selected).
+  publish_table -- (beyond-paper) refresh-under-load: queries served
+               through the versioned SnapshotStore while the updater
+               publishes, vs the blocking-swap baseline where serving
+               waits for every update chunk.
 
 Each function returns a list of dict rows and prints CSV.  The JAX path
 (``DynamicSPC``) is the system under test; ``refimpl`` is the
@@ -478,6 +482,91 @@ def serving_table(n=300, m=800, n_events=24, n_queries=2048, batch=256,
             "speedup_vs_eager": round(base / total, 2),
         })
     _print_rows("serving_routes", rows)
+    return rows
+
+
+# -------------------------------------------------------------------------
+def publish_table(n=300, m=800, n_events=24, update_batch=8,
+                  query_batch=128, seed=9) -> List[Dict]:
+    """Refresh-under-load: queries served while the updater publishes
+    versioned snapshots (``SnapshotStore`` + ``serve_from``) vs the
+    blocking-swap baseline where serving waits for each update chunk
+    (the pre-publish behavior: queries and updates interleave on one
+    thread sharing ``svc.index``).  Same event stream, same query
+    generator, same wall-clock window -- the store row should serve
+    strictly more batches, including DURING publishes."""
+    import threading
+
+    from repro.serve import QueryEngine
+
+    edges = random_graph_edges(n, m, seed=seed)
+    events = graph_stream(edges, n, 3 * n_events // 4, n_events // 4,
+                          seed=seed)
+    # warm the update executables (shared compile cache) so the first
+    # timed mode doesn't pay the compiles the second one skips
+    warm = DynamicSPC(n, edges, l_cap=32)
+    warm.apply_events(events, batch_size=update_batch)
+    rows = []
+
+    def run(mode: str) -> Dict:
+        svc = DynamicSPC(n, edges, l_cap=32)
+        eng = QueryEngine()
+        rng = np.random.default_rng(seed)
+        store = svc.attach_store()
+        serve = eng.serve_from(store)
+        # warm the serving compile cache at the real batch shape
+        serve(np.zeros(query_batch, np.int32), np.zeros(query_batch,
+                                                        np.int32))
+        eng.stats.queries = 0
+
+        def one_batch():
+            s = rng.integers(0, n, query_batch)
+            d, _ = serve(s, rng.integers(0, n, query_batch))
+            d.block_until_ready()
+
+        during = 0
+        t0 = _timer()
+        if mode == "store_refresh":
+            failure = []
+
+            def updater():
+                try:
+                    for lo in range(0, len(events), update_batch):
+                        svc.apply_events(events[lo:lo + update_batch],
+                                         batch_size=update_batch)
+                except BaseException as e:
+                    failure.append(e)
+
+            th = threading.Thread(target=updater)
+            th.start()
+            while th.is_alive():  # exits even if the updater dies early
+                one_batch()
+                during += 1  # every batch overlapped an in-flight publish
+            th.join()
+            if failure:
+                raise failure[0]
+        else:  # blocking_swap: serving waits out every update chunk
+            for lo in range(0, len(events), update_batch):
+                svc.apply_events(events[lo:lo + update_batch],
+                                 batch_size=update_batch)
+                one_batch()
+        elapsed = _timer() - t0
+        served = eng.stats.queries
+        return {
+            "mode": mode, "events": len(events),
+            "versions_published": int(store.version),
+            "query_batches": served // query_batch,
+            "queries_served": served,
+            "queries_during_update": during * query_batch,
+            "elapsed_s": round(elapsed, 4),
+            "qps": round(served / elapsed, 1),
+        }
+
+    rows.append(run("blocking_swap"))
+    rows.append(run("store_refresh"))
+    rows[-1]["qps_vs_blocking"] = round(
+        rows[-1]["qps"] / max(rows[0]["qps"], 1e-9), 2)
+    _print_rows("publish_refresh_under_load", rows)
     return rows
 
 

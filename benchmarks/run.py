@@ -21,7 +21,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table4,figure7,figure8_9,figure10,"
                          "figure11,table5,hybrid,serving,dist_update,"
-                         "kernels")
+                         "publish,kernels")
     args = ap.parse_args()
 
     wanted = set(args.only.split(",")) if args.only else None
@@ -72,6 +72,8 @@ def main() -> None:
                           n_events=8, n_queries=512, batch=128)
         dist_rows = go("dist_update", P.dist_update_table, n=100, m=240,
                        n_events=8, batch_size=4)
+        publish_rows = go("publish", P.publish_table, n=120, m=300,
+                          n_events=12, update_batch=4, query_batch=64)
     else:
         go("table4", P.table4)
         go("figure7", P.figure7)
@@ -82,6 +84,7 @@ def main() -> None:
         hybrid_rows = go("hybrid", P.hybrid_table)
         serving_rows = go("serving", P.serving_table)
         dist_rows = go("dist_update", P.dist_update_table)
+        publish_rows = go("publish", P.publish_table)
     root = pathlib.Path(__file__).resolve().parent.parent
     if hybrid_rows is not None:
         out = root / "BENCH_hybrid.json"
@@ -94,6 +97,10 @@ def main() -> None:
     if dist_rows is not None:
         out = root / "BENCH_dist_update.json"
         out.write_text(json.dumps(dist_rows, indent=2) + "\n")
+        print(f"wrote {out}")
+    if publish_rows is not None:
+        out = root / "BENCH_publish.json"
+        out.write_text(json.dumps(publish_rows, indent=2) + "\n")
         print(f"wrote {out}")
     go("kernels", lambda: (kernels_bench.query_kernel_vs_jnp(),
                            kernels_bench.segment_matmul_vs_segment_sum()))

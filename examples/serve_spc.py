@@ -1,17 +1,22 @@
-"""Query-server loop: serve SPC queries while the index is maintained.
+"""Query-server loop: an updater thread publishing versioned snapshots
+while a serving replica answers continuously from the store.
 
-The DSPC premise end-to-end: a ``DynamicSPC`` service ingests a mixed
+The DSPC premise end-to-end, now with the update -> serve coordination
+made explicit: a ``DynamicSPC`` updater thread ingests a mixed
 edge-event stream in batched chunks (``hyb_spc_batch``, one jitted
-dispatch per chunk) while a ``QueryEngine`` front end answers query
-batches between chunks -- gather-once, bucket-padded, routed (jit merge
-on CPU; the Pallas kernel route can be forced with ``--route pallas``,
-which demonstrates the exactness bound: batches that might exceed fp32's
-2^24 fall back to the int64 merge path automatically).
+dispatch per chunk) and publishes each committed chunk as a versioned
+snapshot into a ``SnapshotStore``; the main thread is a serving replica
+that pins ``store.current()`` per batch through
+``QueryEngine.serve_from`` -- queries keep flowing *during* updates
+instead of waiting for them, a publish never touches an in-flight
+batch, and the 2^24 exactness routing bound is read off the pinned
+snapshot's cached ``cnt_sum`` field.
 
 Run:  PYTHONPATH=src python examples/serve_spc.py [--n 300 --m 900]
 """
 
 import argparse
+import threading
 import time
 
 import numpy as np
@@ -32,6 +37,8 @@ def main():
     ap.add_argument("--query-batch", type=int, default=128)
     ap.add_argument("--route", default="auto",
                     choices=list(QueryEngine.ROUTES))
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="publish -> durable snapshot directory")
     args = ap.parse_args()
 
     edges = random_graph_edges(args.n, args.m, seed=0)
@@ -41,39 +48,56 @@ def main():
     print(f"  built in {time.perf_counter() - t0:.2f}s, "
           f"{svc.index_entries()} entries")
 
+    store = svc.attach_store(checkpoint_dir=args.checkpoint_dir)
     engine = QueryEngine(route=args.route)
+    serve = engine.serve_from(store)
     events = graph_stream(edges, args.n, args.inserts, args.deletes, seed=1)
     rng = np.random.default_rng(2)
 
-    # warm the serving compile cache before the loop (steady-state µs),
+    # warm the serving compile cache before the loop (steady-state us),
     # then reset the counters so stats reflect only served traffic
-    engine.query_batch(svc.index, [0], [0])
+    serve([0], [0])
     s = rng.integers(0, args.n, args.query_batch)
-    engine.query_batch(svc.index, s, s)
+    serve(s, s)
     engine.stats = ServeStats()
 
-    for lo in range(0, len(events), args.update_batch):
-        chunk = events[lo:lo + args.update_batch]
-        t0 = time.perf_counter()
-        svc.apply_events(chunk, batch_size=args.update_batch)
-        t_upd = time.perf_counter() - t0
-        # serve a query batch against the fresh index snapshot
+    # -- updater thread: replay chunks, publish one version per chunk ----
+    chunk_times = []
+
+    def updater():
+        for lo in range(0, len(events), args.update_batch):
+            t0 = time.perf_counter()
+            svc.apply_events(events[lo:lo + args.update_batch],
+                             batch_size=args.update_batch)
+            chunk_times.append(time.perf_counter() - t0)
+
+    th = threading.Thread(target=updater)
+    t_start = time.perf_counter()
+    th.start()
+
+    # -- serving replica: pin a snapshot per batch, never block on updates
+    while th.is_alive():
         s = rng.integers(0, args.n, args.query_batch)
         t = rng.integers(0, args.n, args.query_batch)
-        before = dict(engine.stats.routes)
         t0 = time.perf_counter()
-        d, c = engine.query_batch(svc.index, s, t)
+        d, c = serve(s, t)
         d.block_until_ready()
         t_q = time.perf_counter() - t0
-        route = next(r for r, k in engine.stats.routes.items()
-                     if k != before.get(r, 0))  # the route THIS batch took
+        v = max(engine.stats.versions)  # version this batch pinned
         k = int(np.argmin(np.asarray(d)))
         dk = "inf" if int(d[k]) >= int(INF) else int(d[k])
-        print(f"  events[{lo:3d}:{lo + len(chunk):3d}] upd {t_upd:.3f}s | "
-              f"{args.query_batch} queries in {1e3 * t_q:.2f}ms "
-              f"({1e6 * t_q / args.query_batch:.1f}us/q, route={route}) "
+        print(f"  v{v:02d} | {args.query_batch} queries in "
+              f"{1e3 * t_q:.2f}ms ({1e6 * t_q / args.query_batch:.1f}us/q) "
               f"e.g. spc({int(s[k])},{int(t[k])})=({dk},{int(c[k])})")
+    th.join()
+    elapsed = time.perf_counter() - t_start
+    store.wait()
 
+    print(f"replayed {len(events)} events in {len(chunk_times)} chunks "
+          f"(avg {np.mean(chunk_times):.3f}s/chunk); published "
+          f"version {store.version} | served {engine.stats.queries} "
+          f"queries across versions {sorted(engine.stats.versions)} "
+          f"in {elapsed:.2f}s")
     print(f"update stats: {svc.stats}")
     print(f"serving stats: {engine.stats}")
 

@@ -164,6 +164,21 @@ def make_distributed_updater(mesh: Mesh,
     )
 
 
+def replicate_index(mesh: Mesh, idx) -> "SPCIndex":  # noqa: F821
+    """Device-put an SPCIndex fully replicated over ``mesh``.
+
+    This is the *staging* half of the snapshot publish protocol
+    (``repro.serve.publish.SnapshotStore``): the updater's freshly
+    committed index -- host arrays or single-device -- is laid out onto
+    every serving device BEFORE the store's atomic swap, so replicas
+    that pin the new version never pay a cross-device transfer (or see a
+    half-placed pytree) mid-batch.  Labels are replicated, matching
+    :func:`make_sharded_query`'s ``in_specs=(P(), ...)`` contract.
+    """
+    sharding = jax.sharding.NamedSharding(mesh, P())
+    return jax.tree.map(lambda x: jax.device_put(x, sharding), idx)
+
+
 def make_sharded_query(mesh: Mesh, batch_axes: Tuple[str, ...] = ("data",)):
     """Batched SPC queries sharded over the query batch.
 

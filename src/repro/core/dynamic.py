@@ -20,7 +20,13 @@ Responsibilities beyond the jitted algorithm steps:
   the mesh's edge axis) while this driver's capacity pre-provision and
   overflow-retry machinery runs unchanged, re-padding the edge arrays
   to the shard count after every capacity change;
-* checkpointable state (arrays only -- see ``repro.train.checkpoint``).
+* checkpointable state (arrays only -- see ``repro.train.checkpoint``),
+  including a monotone update version counter;
+* snapshot publishing: ``attach_store()`` wires a
+  ``repro.serve.publish.SnapshotStore`` so every *committed* update (one
+  per mutation / event chunk, after overflow-retry settles) publishes a
+  versioned snapshot for serving replicas to pin -- the double-buffered
+  update -> replica refresh protocol.
 
 This mirrors what the C++ artifact's main loop does, lifted into a
 recoverable, shardable form.
@@ -83,6 +89,8 @@ class DynamicSPC:
         self.stats = UpdateStats()
         self._engine = None
         self._updater = None
+        self._store = None
+        self.version = 0  # bumped per committed update; state_dict carries it
         if mesh is not None:
             from repro.core.distributed import make_distributed_updater
             self._updater = make_distributed_updater(mesh, edge_axis)
@@ -107,6 +115,7 @@ class DynamicSPC:
     def rebuild(self) -> None:
         """Reconstruction baseline (what the paper's HP-SPC rerun does)."""
         self.index = self._build(self.index.l_cap)
+        self._commit()
 
     @property
     def n(self) -> int:
@@ -121,6 +130,42 @@ class DynamicSPC:
             from repro.serve import QueryEngine
             self._engine = QueryEngine()
         return self._engine
+
+    # -- snapshot publishing -------------------------------------------------
+    def attach_store(self, store=None, **store_kwargs):
+        """Attach (or create) a ``repro.serve.SnapshotStore``: every
+        committed update from here on publishes the new index snapshot
+        at its bumped version, so serving replicas reading through the
+        store refresh via the double-buffered swap instead of sharing
+        this driver's mutable ``.index`` attribute.
+
+        Only *committed* states publish -- a chunk that overflows and
+        replays never exposes its intermediate index, readers stay
+        pinned on version k until k+1's retry succeeds.
+        """
+        if store is None:
+            from repro.serve.publish import SnapshotStore
+            store = SnapshotStore(self.index, version=self.version,
+                                  **store_kwargs)
+        elif store.version is not None and store.version > self.version:
+            # fail here, not with a confusing monotonicity error on the
+            # first update after attach
+            raise ValueError(
+                f"store is at version {store.version}, ahead of this "
+                f"service (version {self.version}); restore a newer "
+                f"state or attach a fresh store")
+        elif store.version is None or store.version < self.version:
+            store.publish(self.index, version=self.version)
+        self._store = store
+        return store
+
+    def _commit(self) -> None:
+        """Bump the version and publish the committed snapshot (if a
+        store is attached).  Called exactly once per successful public
+        mutation / event chunk, after overflow-retry has settled."""
+        self.version += 1
+        if self._store is not None:
+            self._store.publish(self.index, version=self.version)
 
     def query(self, s: int, t: int) -> Tuple[int, int]:
         # bounds validation happens inside the engine (host-side)
@@ -159,6 +204,7 @@ class DynamicSPC:
             self.index = L.repad(self.index, self.index.l_cap * 2)
             self.stats.label_regrows += 1
         self.stats.inserts += 1
+        self._commit()
 
     def delete_edge(self, a: int, b: int) -> None:
         self._check_edge_ids(a, b)
@@ -185,6 +231,7 @@ class DynamicSPC:
                 self.index = L.repad(self.index, self.index.l_cap * 2)
                 self.stats.label_regrows += 1
         self.stats.deletions += 1
+        self._commit()
 
     def insert_edges(self, edges) -> None:
         """Batched insertion: one jitted call for the whole batch
@@ -208,11 +255,13 @@ class DynamicSPC:
             self.index = L.repad(self.index, self.index.l_cap * 2)
             self.stats.label_regrows += 1
         self.stats.inserts += len(edges)
+        self._commit()
 
     def insert_vertex(self) -> int:
         """Append an isolated vertex (lowest rank). Recompiles (n changes)."""
         self.graph = G.add_vertices(self.graph, 1)
         self.index = L.add_vertices(self.index, 1)
+        self._commit()
         return self.n - 1
 
     def delete_vertex(self, v: int,
@@ -223,10 +272,14 @@ class DynamicSPC:
         self._check_vertex(v)
         src = np.asarray(self.graph.src)
         dst = np.asarray(self.graph.dst)
-        nbrs = sorted(set(int(w) for s, w in zip(src, dst) if s == v and w != self.n))
-        if not nbrs:
+        # live directed slots out of v give the neighbor set in one
+        # vectorized pass (tombstones/pads hold src = n, never v);
+        # np.unique also delivers the sorted order the old scan produced
+        nbrs = np.unique(dst[(src == v) & (dst != self.n)])
+        if not nbrs.size:
             return
-        self.apply_events([("-", v, u) for u in nbrs], batch_size=batch_size)
+        self.apply_events([("-", v, int(u)) for u in nbrs],
+                          batch_size=batch_size)
 
     # -- batched event replay (the hybrid engine) ---------------------------
     def _edge_set(self) -> set:
@@ -347,6 +400,10 @@ class DynamicSPC:
             self.stats.batched_events += len(chunk)
             self.stats.inserts += n_ins
             self.stats.deletions += len(chunk) - n_ins
+            # one publish per committed chunk: replicas reading through
+            # an attached store refresh at chunk granularity, never
+            # seeing a mid-retry intermediate
+            self._commit()
 
     # -- introspection -------------------------------------------------------
     def index_entries(self) -> int:
@@ -362,26 +419,122 @@ class DynamicSPC:
             "graph.m2": self.graph.m2,
             "index.hub": self.index.hub, "index.dist": self.index.dist,
             "index.cnt": self.index.cnt, "index.size": self.index.size,
+            "index.cnt_sum": self.index.cnt_sum,
+            "version": jnp.int64(self.version),
         }
+
+    @staticmethod
+    def _validate_state(n: int, state: dict) -> dict:
+        """Host-side schema check of a state dict before any array lands
+        on device.  A truncated or shape-mismatched leaf would otherwise
+        build a service whose gathers/scatters silently clamp into the
+        dump row (the same defect class as unvalidated vertex ids) --
+        every violation raises ``ValueError`` naming the offending key.
+        Returns the leaves as host numpy arrays.
+        """
+        required = ("graph.src", "graph.dst", "graph.m2",
+                    "index.hub", "index.dist", "index.cnt", "index.size")
+        host = {}
+        for key in required:
+            if key not in state:
+                raise ValueError(f"state dict missing key {key!r}")
+        for key in state:
+            arr = np.asarray(state[key])
+            if not np.issubdtype(arr.dtype, np.integer):
+                raise ValueError(
+                    f"state[{key!r}] has non-integer dtype {arr.dtype}")
+            host[key] = arr
+
+        def want(key, shape):
+            if host[key].shape != shape:
+                raise ValueError(
+                    f"state[{key!r}] has shape {host[key].shape}, "
+                    f"want {shape} (n={n})")
+
+        cap_e = host["graph.src"].shape
+        if len(cap_e) != 1:
+            raise ValueError(
+                f"state['graph.src'] must be 1-D, got shape {cap_e}")
+        want("graph.dst", cap_e)
+        want("graph.m2", ())
+        m2 = int(host["graph.m2"])
+        if not 0 <= m2 <= cap_e[0]:
+            raise ValueError(
+                f"state['graph.m2'] = {m2} outside [0, cap_e={cap_e[0]}]")
+        hub = host["index.hub"].shape
+        if len(hub) != 2 or hub[0] != n + 1:
+            raise ValueError(
+                f"state['index.hub'] has shape {hub}, want (n + 1 = "
+                f"{n + 1}, l_cap)")
+        want("index.dist", hub)
+        want("index.cnt", hub)
+        want("index.size", (n + 1,))
+        if "index.cnt_sum" in host:
+            want("index.cnt_sum", (n + 1,))
+        if "version" in host:
+            want("version", ())
+            if int(host["version"]) < 0:
+                raise ValueError(
+                    f"state['version'] = {int(host['version'])} < 0")
+        return host
 
     @classmethod
     def from_state_dict(cls, n: int, state: dict, *,
                         mesh=None, edge_axis: str = "model") -> "DynamicSPC":
+        host = cls._validate_state(n, state)
         obj = cls.__new__(cls)
         obj.stats = UpdateStats()
         obj._engine = None
         obj._updater = None
+        obj._store = None
+        obj.version = int(host.get("version", 0))
         if mesh is not None:
             from repro.core.distributed import make_distributed_updater
             obj._updater = make_distributed_updater(mesh, edge_axis)
         obj.graph = obj._pad_for_mesh(
-            Graph(src=jnp.asarray(state["graph.src"]),
-                  dst=jnp.asarray(state["graph.dst"]),
-                  m2=jnp.asarray(state["graph.m2"]), n=n))
+            Graph(src=jnp.asarray(host["graph.src"], jnp.int32),
+                  dst=jnp.asarray(host["graph.dst"], jnp.int32),
+                  m2=jnp.asarray(host["graph.m2"], jnp.int32), n=n))
+        cnt = jnp.asarray(host["index.cnt"], jnp.int64)
+        # pre-cached-bound state dicts lack the field: rebuild the cache
+        cnt_sum = (jnp.asarray(host["index.cnt_sum"], jnp.int64)
+                   if "index.cnt_sum" in host else L.recompute_cnt_sum(cnt))
         obj.index = SPCIndex(
-            hub=jnp.asarray(state["index.hub"]),
-            dist=jnp.asarray(state["index.dist"]),
-            cnt=jnp.asarray(state["index.cnt"]),
-            size=jnp.asarray(state["index.size"]),
-            overflow=jnp.int32(0), n=n)
+            hub=jnp.asarray(host["index.hub"], jnp.int32),
+            dist=jnp.asarray(host["index.dist"], jnp.int32),
+            cnt=cnt, size=jnp.asarray(host["index.size"], jnp.int32),
+            cnt_sum=cnt_sum, overflow=jnp.int32(0), n=n)
         return obj
+
+    @classmethod
+    def from_checkpoint(cls, path: str, n: int, step: int | None = None, *,
+                        mesh=None, edge_axis: str = "model") -> "DynamicSPC":
+        """Restore from an on-disk ``repro.train.checkpoint`` directory.
+
+        Builds the restore template from the *committed manifest* rather
+        than from a live ``state_dict()``, so checkpoints written before
+        the cached-bound/version schema (7 leaves instead of 9) restore
+        too -- ``checkpoint.restore(dir, svc.state_dict())`` would
+        reject them on leaf count before :meth:`from_state_dict`'s
+        legacy handling could run.
+        """
+        from repro.train import checkpoint as C
+        man = C.manifest(path, step)
+        new = sorted(("graph.src", "graph.dst", "graph.m2", "index.hub",
+                      "index.dist", "index.cnt", "index.size",
+                      "index.cnt_sum", "version"))
+        legacy = sorted(k for k in new
+                        if k not in ("index.cnt_sum", "version"))
+        for keys in (new, legacy):
+            if len(keys) == len(man["shapes"]):
+                break
+        else:
+            raise ValueError(
+                f"checkpoint at {path} has {len(man['shapes'])} leaves; "
+                f"not a DynamicSPC state dict")
+        tree_like = {
+            k: np.empty(shape, dtype=np.dtype(dt))
+            for k, shape, dt in zip(keys, man["shapes"], man["dtypes"])
+        }
+        state, _, _ = C.restore(path, tree_like, step=man["step"])
+        return cls.from_state_dict(n, state, mesh=mesh, edge_axis=edge_axis)

@@ -35,6 +35,7 @@ class SPCIndex:
     dist: jax.Array  # int32[n + 1, L_cap], pad = INF
     cnt: jax.Array   # int64[n + 1, L_cap], pad = 0
     size: jax.Array  # int32[n + 1]
+    cnt_sum: jax.Array   # int64[n + 1]: sum of the row's counts (see below)
     overflow: jax.Array  # int32 scalar: #lost label writes (grow & retry)
     n: int = dataclasses.field(metadata=dict(static=True))
 
@@ -46,12 +47,30 @@ class SPCIndex:
         return jnp.sum(self.size)
 
 
+#: ``cnt_sum`` invariant -- ``cnt_sum[v] == sum(cnt[v])`` at all times.
+#: ``sum(cnt[s]) * sum(cnt[t])`` is the serving engine's per-row fp32
+#: exactness bound (``repro.core.query.count_upper_bound_rows``); caching
+#: the per-vertex factor on the index turns the per-batch O(B L)
+#: reduction into an O(1) lookup per row, and lets the bound travel with
+#: a published snapshot so replicas route consistently mid-refresh.  The
+#: four bulk mutation helpers below are the ONLY label writers -- every
+#: update engine (IncSPC/DecSPC/HybSPC, replicated or edge-sharded) goes
+#: through them -- so maintaining the delta here keeps the cache exact
+#: everywhere (differential-tested against :func:`recompute_cnt_sum`).
+
+
+def recompute_cnt_sum(cnt: jax.Array) -> jax.Array:
+    """The cached field from scratch (validation / legacy state dicts)."""
+    return jnp.sum(cnt, axis=1, dtype=jnp.int64)
+
+
 def empty_index(n: int, l_cap: int) -> SPCIndex:
     return SPCIndex(
         hub=jnp.full((n + 1, l_cap), n, dtype=jnp.int32),
         dist=jnp.full((n + 1, l_cap), INF, dtype=jnp.int32),
         cnt=jnp.zeros((n + 1, l_cap), dtype=jnp.int64),
         size=jnp.zeros(n + 1, dtype=jnp.int32),
+        cnt_sum=jnp.zeros(n + 1, dtype=jnp.int64),
         overflow=jnp.int32(0),
         n=n,
     )
@@ -67,6 +86,7 @@ def repad(idx: SPCIndex, new_cap: int) -> SPCIndex:
         dist=jnp.pad(idx.dist, ((0, 0), (0, pad)), constant_values=int(INF)),
         cnt=jnp.pad(idx.cnt, ((0, 0), (0, pad)), constant_values=0),
         size=idx.size,
+        cnt_sum=idx.cnt_sum,  # pad entries carry cnt = 0
         overflow=jnp.int32(0),
         n=idx.n,
     )
@@ -86,19 +106,23 @@ def add_vertices(idx: SPCIndex, count: int) -> SPCIndex:
     new_dist = np.full((n_new + 1, l_cap), int(INF), dtype=np.int32)
     new_cnt = np.zeros((n_new + 1, l_cap), dtype=np.int64)
     new_size = np.zeros(n_new + 1, dtype=np.int32)
+    new_cnt_sum = np.zeros(n_new + 1, dtype=np.int64)
     new_hub[: idx.n] = hub[: idx.n]
     new_dist[: idx.n] = np.asarray(idx.dist)[: idx.n]
     new_cnt[: idx.n] = np.asarray(idx.cnt)[: idx.n]
     new_size[: idx.n] = np.asarray(idx.size)[: idx.n]
+    new_cnt_sum[: idx.n] = np.asarray(idx.cnt_sum)[: idx.n]
     for k in range(count):  # self labels for the new vertices
         v = idx.n + k
         new_hub[v, 0] = v
         new_dist[v, 0] = 0
         new_cnt[v, 0] = 1
         new_size[v] = 1
+        new_cnt_sum[v] = 1
     return SPCIndex(
         hub=jnp.asarray(new_hub), dist=jnp.asarray(new_dist),
         cnt=jnp.asarray(new_cnt), size=jnp.asarray(new_size),
+        cnt_sum=jnp.asarray(new_cnt_sum),
         overflow=idx.overflow, n=n_new,
     )
 
@@ -123,8 +147,9 @@ def bulk_append(idx: SPCIndex, h, d_new, c_new, mask) -> SPCIndex:
     cnt = idx.cnt.at[rows, col].set(
         jnp.where(fits, c_new.astype(jnp.int64), idx.cnt[rows, col]))
     size = idx.size + fits.astype(jnp.int32)
+    cnt_sum = idx.cnt_sum + jnp.where(fits, c_new.astype(jnp.int64), 0)
     return dataclasses.replace(
-        idx, hub=hub, dist=dist, cnt=cnt, size=size,
+        idx, hub=hub, dist=dist, cnt=cnt, size=size, cnt_sum=cnt_sum,
         overflow=idx.overflow + jnp.sum(lost, dtype=jnp.int32))
 
 
@@ -137,6 +162,8 @@ def bulk_upsert(idx: SPCIndex, h, d_new, c_new, mask) -> SPCIndex:
     h = jnp.asarray(h, jnp.int32)
     eq = idx.hub == h                              # [n+1, L]
     has = jnp.any(eq, axis=1)                      # [n+1]
+    rows_i = jnp.arange(idx.n + 1)
+    old_c = idx.cnt[rows_i, jnp.argmax(eq, axis=1)]  # (h, .) value, if any
     # --- replace path -----------------------------------------------------
     rep = (mask & has)[:, None] & eq
     dist = jnp.where(rep, d_new[:, None].astype(jnp.int32), idx.dist)
@@ -172,8 +199,12 @@ def bulk_upsert(idx: SPCIndex, h, d_new, c_new, mask) -> SPCIndex:
                             cnt_sh)),
         cnt)
     size = idx.size + fits.astype(jnp.int32)
+    c64 = c_new.astype(jnp.int64)
+    cnt_sum = (idx.cnt_sum
+               + jnp.where(mask & has, c64 - old_c, 0)   # replaced in place
+               + jnp.where(fits, c64, 0))                # freshly inserted
     return dataclasses.replace(
-        idx, hub=hub, dist=dist, cnt=cnt, size=size,
+        idx, hub=hub, dist=dist, cnt=cnt, size=size, cnt_sum=cnt_sum,
         overflow=idx.overflow + jnp.sum(lost, dtype=jnp.int32))
 
 
@@ -201,7 +232,10 @@ def bulk_remove(idx: SPCIndex, h, mask) -> SPCIndex:
     cnt = jnp.where(actb & (cols >= posb),
                     jnp.where(last, jnp.int64(0), cnt_sh), idx.cnt)
     size = idx.size - act.astype(jnp.int32)
-    return dataclasses.replace(idx, hub=hub, dist=dist, cnt=cnt, size=size)
+    rows = jnp.arange(idx.n + 1)
+    cnt_sum = idx.cnt_sum - jnp.where(act, idx.cnt[rows, pos], 0)
+    return dataclasses.replace(idx, hub=hub, dist=dist, cnt=cnt, size=size,
+                               cnt_sum=cnt_sum)
 
 
 def reset_isolated_row(idx: SPCIndex, v) -> SPCIndex:
@@ -221,6 +255,7 @@ def reset_isolated_row(idx: SPCIndex, v) -> SPCIndex:
         dist=idx.dist.at[v].set(row_dist),
         cnt=idx.cnt.at[v].set(row_cnt),
         size=idx.size.at[v].set(1),
+        cnt_sum=idx.cnt_sum.at[v].set(1),
     )
 
 
@@ -270,4 +305,5 @@ def from_ref(ref, l_cap: int | None = None) -> SPCIndex:
         size[v] = len(row)
     return SPCIndex(hub=jnp.asarray(hub), dist=jnp.asarray(dist),
                     cnt=jnp.asarray(cnt), size=jnp.asarray(size),
+                    cnt_sum=recompute_cnt_sum(jnp.asarray(cnt)),
                     overflow=jnp.int32(0), n=n)

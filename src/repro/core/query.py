@@ -128,6 +128,19 @@ def count_upper_bound_rows(cnt_s, cnt_t):
     return tot_s * tot_t
 
 
+def cached_count_bound(idx: SPCIndex, s, t):
+    """The same per-row bound as :func:`count_upper_bound_rows`, but from
+    the index's cached per-vertex ``cnt_sum`` field: two O(1) lookups per
+    row instead of an O(L) reduction per side.  The cache is maintained
+    incrementally by every update engine (see ``repro.core.labels``), so
+    a bound read off a published snapshot equals the bound recomputed
+    from that snapshot's rows -- routing stays consistent across serving
+    replicas mid-refresh.
+    """
+    return (idx.cnt_sum[s].astype(jnp.float64)
+            * idx.cnt_sum[t].astype(jnp.float64))
+
+
 def pre_pair_query(idx: SPCIndex, s, t):
     """PreQuery(s, t): only hubs ranked strictly higher than s."""
     return _intersect(

@@ -23,8 +23,7 @@ import numpy as np
 
 from repro.core.graph import INF
 from repro.core.labels import SPCIndex
-from repro.core.query import (count_upper_bound_rows, gather_rows,
-                              merge_rows_jit)
+from repro.core.query import cached_count_bound, gather_rows, merge_rows_jit
 from repro.kernels.spc_query.kernel import spc_query_pallas
 
 #: Largest integer count the fp32 kernel is guaranteed to report exactly.
@@ -51,9 +50,11 @@ def gather_rows_with_bounds(idx: SPCIndex, s, t):
     The rows feed *either* the Pallas kernel or the int64 merge fallback
     (``merge_rows`` tolerates the re-padded t side), so the host-side
     per-row route decision costs one gather and one [B]-vector sync.
+    The bound comes from the index's cached per-vertex ``cnt_sum`` field
+    (O(1) per row; equal to ``count_upper_bound_rows`` on the gathered
+    rows because the cache is maintained by every update engine).
     """
-    rows = prep_rows(idx, s, t)
-    return rows, count_upper_bound_rows(rows[2], rows[5])
+    return prep_rows(idx, s, t), cached_count_bound(idx, s, t)
 
 
 def rows_query_pallas(hub_s, dist_s, cnt_s, hub_t, dist_t, cnt_t, *,

@@ -4,9 +4,17 @@
 L x L table, jitted int64 sorted-merge, Pallas TPU kernel) behind a
 single routed, bucket-padded, compile-cached entry point; see
 ``repro.serve.engine`` for the route decision table.
+
+``SnapshotStore`` (``repro.serve.publish``) is the update -> serve
+coordination layer: double-buffered, version-counted index snapshots
+that the updater publishes and serving replicas pin per batch
+(``QueryEngine.serve_from``), with an optional publish -> checkpoint
+durability hook.
 """
 
 from repro.serve.engine import (DEFAULT_BUCKETS, QueryEngine, ServeStats,
                                 bucket_size)
+from repro.serve.publish import Snapshot, SnapshotStore, load_snapshot
 
-__all__ = ["QueryEngine", "ServeStats", "DEFAULT_BUCKETS", "bucket_size"]
+__all__ = ["QueryEngine", "ServeStats", "DEFAULT_BUCKETS", "bucket_size",
+           "Snapshot", "SnapshotStore", "load_snapshot"]

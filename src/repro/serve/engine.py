@@ -36,11 +36,20 @@ that the *engineered* path instead of three diverging ones:
    ``repro.core.distributed.make_sharded_query`` (index replicated,
    batch split over mesh axes) with the same pad-and-slice handling so
    multi-device replicas serve arbitrary batch sizes.
+
+5. **Refresh.**  ``QueryEngine.serve_from(store)`` serves from a
+   ``repro.serve.publish.SnapshotStore``: each batch pins one published
+   (version, index) snapshot, the updater swaps new versions in
+   underneath without ever touching an in-flight batch, and the 2^24
+   routing bound is read off the snapshot's cached per-vertex
+   ``cnt_sum`` field -- O(1) per row, consistent across replicas
+   mid-refresh.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, Tuple
 
 import jax
@@ -69,6 +78,11 @@ def bucket_size(b: int, buckets=DEFAULT_BUCKETS) -> int:
 #: ``core.query`` (gather + sorted-merge in a single dispatch).
 _serve_merge = Q.batched_query_jit
 
+#: B = 0 answers, materialized once host-side so empty batches return
+#: without touching any jit cache (see ``QueryEngine.query_batch``).
+_EMPTY_DIST = jnp.asarray(np.empty(0, np.int32))
+_EMPTY_CNT = jnp.asarray(np.empty(0, np.int64))
+
 
 @jax.jit
 def _serve_table(idx: SPCIndex, s, t):
@@ -81,11 +95,24 @@ class ServeStats:
     queries: int = 0          # real (un-padded) queries answered
     batches: int = 0          # engine dispatches
     routes: Dict[str, int] = dataclasses.field(default_factory=dict)
+    #: queries answered per pinned snapshot version (``serve_from`` only)
+    versions: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        # one engine may front many replica threads (the publish
+        # module's reader contract); counters must not lose increments
+        # to interleaved read-modify-writes
+        self._lock = threading.Lock()
 
     def count(self, route: str, queries: int) -> None:
-        self.queries += queries
-        self.batches += 1
-        self.routes[route] = self.routes.get(route, 0) + 1
+        with self._lock:
+            self.queries += queries
+            self.batches += 1
+            self.routes[route] = self.routes.get(route, 0) + 1
+
+    def count_version(self, version: int, queries: int) -> None:
+        with self._lock:
+            self.versions[version] = self.versions.get(version, 0) + queries
 
 
 class QueryEngine:
@@ -136,9 +163,14 @@ class QueryEngine:
             raise ValueError(f"unknown route {route!r}; want one of "
                              f"{self.ROUTES}")
         self._validate_ids(idx.n, s, t)
+        b = s.shape[0]
+        if b == 0:
+            # empty batch: answer host-side -- padding B=0 up to the
+            # smallest bucket would dispatch 8 dump rows and record a
+            # phantom batch of 0 queries in the stats
+            return _EMPTY_DIST, _EMPTY_CNT
         s = s.astype(np.int32)
         t = t.astype(np.int32)
-        b = s.shape[0]
         pad = bucket_size(b, self.buckets) - b
         if pad:  # dump-row pairs: evaluate to (INF, 0), sliced off below
             s = np.pad(s, (0, pad), constant_values=idx.n)
@@ -184,24 +216,72 @@ class QueryEngine:
         shards = 1
         for ax in batch_axes:
             shards *= mesh.shape[ax]
+        axes = "x".join(batch_axes)
 
-        def serve(idx: SPCIndex, s, t):
+        def serve(idx: SPCIndex, s, t, route: str | None = None):
             s = np.asarray(s).reshape(-1)
             t = np.asarray(t).reshape(-1)
             if s.shape != t.shape:
                 raise ValueError(
                     f"s/t shape mismatch: {s.shape} vs {t.shape}")
+            # same route contract as query_batch: unknown names raise,
+            # and a configured route the sharded path cannot honor is an
+            # error instead of being silently ignored
+            route_ = route or self.route
+            if route_ not in self.ROUTES:
+                raise ValueError(f"unknown route {route_!r}; want one of "
+                                 f"{self.ROUTES}")
+            if route_ not in ("auto", "merge"):
+                raise ValueError(
+                    f"route {route_!r} is not available on the sharded "
+                    f"serving path (only the sorted-merge core is "
+                    f"sharded); use route='auto' or 'merge'")
             self._validate_ids(idx.n, s, t)
+            b = s.shape[0]
+            if b == 0:  # see query_batch: no dispatch, no phantom batch
+                return _EMPTY_DIST, _EMPTY_CNT
             s = s.astype(np.int32)
             t = t.astype(np.int32)
-            b = s.shape[0]
             bp = bucket_size(b, self.buckets)
             bp = -(-bp // shards) * shards  # divisible over the mesh axes
             if bp != b:
                 s = np.pad(s, (0, bp - b), constant_values=idx.n)
                 t = np.pad(t, (0, bp - b), constant_values=idx.n)
             d, c = fn(idx, jnp.asarray(s), jnp.asarray(t))
-            self.stats.count(f"sharded[{'x'.join(batch_axes)}]", b)
+            # route recorded like the single-device paths record theirs,
+            # so mixed single-/multi-device stats stay comparable
+            self.stats.count(f"sharded[{axes}]:merge", b)
             return d[:b], c[:b]
+
+        return serve
+
+    # -- replica serving over a snapshot store ------------------------------
+    def serve_from(self, store, *, mesh=None,
+                   batch_axes: Tuple[str, ...] = ("data",)):
+        """Serving-replica closure over a ``SnapshotStore``
+        (``repro.serve.publish``): each batch pins ``store.current()``
+        for its whole duration, so a concurrent publish of version k+1
+        never touches a batch answering from version k.
+
+        Returns ``serve(s, t, route=None) -> (dist[B], cnt[B])``.  With
+        ``mesh=`` the batch is answered through :meth:`sharded` replicas
+        instead of the single-device routed path.  Consecutive versions
+        reuse the engine's jit compile caches -- executables key on
+        (bucket, l_cap) shapes, not on the snapshot -- so a publish only
+        recompiles when an overflow-retry grew ``l_cap``.  Per-version
+        query counts land in ``stats.versions``.
+        """
+        inner = self.sharded(mesh, batch_axes) if mesh is not None else None
+
+        def serve(s, t, route: str | None = None):
+            snap = store.current()  # pinned for the whole batch
+            if inner is not None:
+                d, c = inner(snap.index, s, t, route=route)
+            else:
+                d, c = self.query_batch(snap.index, s, t, route=route)
+            b = int(d.shape[0])
+            if b:
+                self.stats.count_version(snap.version, b)
+            return d, c
 
         return serve

@@ -1,0 +1,215 @@
+"""Versioned snapshot publish: the update -> serve coordination layer.
+
+DSPC's premise is that the maintained SPC-Index keeps *serving* cheap
+while updates run continuously -- but that only holds if the updater and
+the serving replicas agree on WHICH index a batch is answered from.
+Handing the index around as a bare pytree attribute (what the driver did
+before this module) has no publish step: a reader that gathers its label
+rows while the updater commits chunk k+1 can mix rows from two logical
+indexes.  This module closes that gap with a double-buffered,
+version-counted snapshot store between the updater and the replicas:
+
+* **Double buffer.**  Functional pytrees make the two buffers implicit:
+  the updater *stages* snapshot k+1 -- builds a brand-new index pytree
+  and (on a mesh) lays it out replicated across the serving devices via
+  ``repro.core.distributed.replicate_index`` -- while every reader keeps
+  its pinned reference to snapshot k.  Staging happens OUTSIDE the
+  store's lock: writing the back buffer never blocks readers.
+
+* **Atomic swap.**  :meth:`SnapshotStore.publish` swaps the front
+  pointer under a lock -- one reference assignment -- and bumps a
+  monotonically increasing version counter.  A reader that called
+  :meth:`SnapshotStore.current` a microsecond earlier is untouched: its
+  batch finishes on the pinned ``Snapshot`` bit-for-bit as if no swap
+  had happened.  Version regressions (a stale updater republishing an
+  old state) raise instead of silently rolling replicas back.
+
+* **The bound travels with the version.**  The per-vertex cached
+  ``cnt_sum`` field (``repro.core.labels``) rides inside the snapshot,
+  so the serving engine's 2^24 exactness routing decision is an O(1)
+  lookup on the *published* index -- every replica pinned on version k
+  routes from k's bound, consistent mid-refresh.
+
+* **Published == durable (optional).**  With ``checkpoint_dir=`` every
+  committed version is also checkpointed through
+  ``repro.train.checkpoint``'s tmp + ``os.replace`` protocol (optionally
+  on the async saver thread), so a crashed updater restarts from the
+  last *published* version -- :func:`load_snapshot` restores it without
+  knowing shapes up front.
+
+Producer side: ``DynamicSPC.attach_store()`` publishes after every
+committed mutation / event chunk -- and only committed ones, so an
+overflow-retry mid-chunk never exposes its intermediate index.  Consumer
+side: ``QueryEngine.serve_from(store)`` pins ``store.current()`` per
+batch (single- or multi-device).  Cf. PSPC's replicated hub-label
+serving workers (arXiv:2212.00977) and Farhan et al.'s argument that the
+label structure should carry the metadata queries need (arXiv:2102.08529).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.labels import SPCIndex
+from repro.train import checkpoint as C
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """One immutable published (version, index) pair.
+
+    Holding a ``Snapshot`` IS the pin: the store never mutates published
+    objects, so a batch evaluated against ``snap.index`` is unaffected
+    by any number of concurrent publishes.
+    """
+
+    version: int
+    index: SPCIndex
+
+
+def _snapshot_tree(snap: Snapshot) -> dict:
+    """Flat host-array dict of a snapshot (checkpoint payload).
+
+    Dict pytrees flatten in sorted-key order, which is what lets
+    :func:`load_snapshot` rebuild a ``tree_like`` from the manifest's
+    positional shapes/dtypes.
+    """
+    idx = snap.index
+    return {
+        "index.hub": np.asarray(idx.hub),
+        "index.dist": np.asarray(idx.dist),
+        "index.cnt": np.asarray(idx.cnt),
+        "index.size": np.asarray(idx.size),
+        "index.cnt_sum": np.asarray(idx.cnt_sum),
+        "version": np.int64(snap.version),
+    }
+
+
+class SnapshotStore:
+    """Double-buffered, versioned SPCIndex snapshots (see module doc).
+
+    Thread contract: one publisher (the updater), any number of readers.
+    Readers go through :meth:`current` (or ``QueryEngine.serve_from``)
+    and hold the returned ``Snapshot`` for the duration of a batch;
+    :meth:`publish` stages outside the lock and swaps inside it.
+
+    ``mesh=`` places every staged snapshot replicated over the mesh
+    before the swap (serving-replica layout); ``checkpoint_dir=`` makes
+    every published version durable through the atomic checkpoint
+    protocol, with ``async_checkpoint=True`` moving serialization off
+    the publish path.
+    """
+
+    def __init__(self, index: SPCIndex | None = None, *, version: int = 0,
+                 mesh=None, checkpoint_dir: str | None = None,
+                 async_checkpoint: bool = False, keep: int = 3) -> None:
+        self._lock = threading.Lock()
+        self._mesh = mesh
+        self._ckpt_dir = checkpoint_dir
+        self._saver = C.AsyncSaver() if async_checkpoint else None
+        self._keep = keep
+        self._front: Optional[Snapshot] = None
+        self.publishes = 0  # swap count (excludes the seed snapshot)
+        if index is not None:
+            self._front = Snapshot(int(version), self._stage(index))
+            if self._ckpt_dir is not None:
+                self._checkpoint(self._front)
+
+    # -- reader side --------------------------------------------------------
+    @property
+    def version(self) -> int | None:
+        """Version of the front snapshot (None while empty)."""
+        snap = self._front
+        return None if snap is None else snap.version
+
+    def current(self) -> Snapshot:
+        """Pin the front snapshot: the returned object is immutable and
+        survives any concurrent publish unchanged."""
+        snap = self._front  # single reference read: atomic under the GIL
+        if snap is None:
+            raise RuntimeError("SnapshotStore holds no published snapshot")
+        return snap
+
+    # -- publisher side -----------------------------------------------------
+    def _stage(self, index: SPCIndex) -> SPCIndex:
+        """Write the back buffer: place the new snapshot where replicas
+        will read it.  Runs outside the lock -- readers stay on the
+        front snapshot for however long this takes."""
+        if self._mesh is not None:
+            from repro.core.distributed import replicate_index
+            index = replicate_index(self._mesh, index)
+        return index
+
+    def publish(self, index: SPCIndex, *, version: int | None = None) -> int:
+        """Stage ``index`` as the next snapshot and atomically swap it
+        in at ``version`` (default: front version + 1).  Returns the
+        published version; raises ``ValueError`` on a non-increasing
+        one (stale publisher)."""
+        staged = self._stage(index)
+        with self._lock:
+            prev = -1 if self._front is None else self._front.version
+            v = prev + 1 if version is None else int(version)
+            if v <= prev:
+                raise ValueError(
+                    f"snapshot version must increase monotonically: "
+                    f"got {v}, front is {prev}")
+            snap = Snapshot(v, staged)
+            self._front = snap
+            self.publishes += 1
+        if self._ckpt_dir is not None:
+            self._checkpoint(snap)
+        return v
+
+    # -- durability hook ----------------------------------------------------
+    def _checkpoint(self, snap: Snapshot) -> None:
+        tree = _snapshot_tree(snap)
+        meta = {"n": snap.index.n, "l_cap": snap.index.l_cap,
+                "version": snap.version}
+        if self._saver is not None:
+            self._saver.save(self._ckpt_dir, snap.version, tree, meta)
+        else:
+            C.save(self._ckpt_dir, snap.version, tree, meta)
+        # only committed step_* dirs are touched; an in-flight async
+        # write lives in a .tmp dir and is invisible to gc
+        C.gc_old(self._ckpt_dir, keep=self._keep)
+
+    def wait(self) -> None:
+        """Drain an in-flight async checkpoint (no-op otherwise)."""
+        if self._saver is not None:
+            self._saver.wait()
+
+
+def load_snapshot(path: str, step: int | None = None) -> Snapshot:
+    """Restore a published snapshot from a store's checkpoint directory
+    (default: the latest committed version).
+
+    Shapes come from the committed manifest
+    (``repro.train.checkpoint.manifest``), so no ``tree_like`` template
+    is needed; the version counter is restored from the payload itself.
+    """
+    man = C.manifest(path, step)
+    keys = sorted(("index.hub", "index.dist", "index.cnt", "index.size",
+                   "index.cnt_sum", "version"))
+    if len(man["shapes"]) != len(keys):
+        raise ValueError(
+            f"checkpoint at {path} has {len(man['shapes'])} leaves, "
+            f"want {len(keys)} (not a snapshot checkpoint?)")
+    tree_like = {
+        k: np.empty(shape, dtype=np.dtype(dt))
+        for k, shape, dt in zip(keys, man["shapes"], man["dtypes"])
+    }
+    tree, _, meta = C.restore(path, tree_like, step=man["step"])
+    n = int(meta["n"])
+    idx = SPCIndex(
+        hub=jnp.asarray(tree["index.hub"]),
+        dist=jnp.asarray(tree["index.dist"]),
+        cnt=jnp.asarray(tree["index.cnt"]),
+        size=jnp.asarray(tree["index.size"]),
+        cnt_sum=jnp.asarray(tree["index.cnt_sum"]),
+        overflow=jnp.int32(0), n=n)
+    return Snapshot(version=int(tree["version"]), index=idx)

@@ -86,6 +86,19 @@ class AsyncSaver:
             self._thread = None
 
 
+def manifest(path: str, step: int | None = None) -> dict:
+    """The committed manifest of ``step`` (default: latest): treedef
+    string, per-leaf shapes/dtypes, user metadata.  Lets callers that
+    only persisted a flat dict (e.g. the snapshot publish hook in
+    ``repro.serve.publish``) rebuild a ``tree_like`` for :func:`restore`
+    without knowing the array shapes up front."""
+    step = step if step is not None else latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint under {path}")
+    with open(os.path.join(path, f"step_{step:09d}", "manifest.json")) as f:
+        return json.load(f)
+
+
 def latest_step(path: str) -> int | None:
     ptr = os.path.join(path, "LATEST")
     if not os.path.exists(ptr):

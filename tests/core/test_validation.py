@@ -71,3 +71,67 @@ def test_dump_row_stays_clean_after_rejections(svc):
     hub = np.asarray(svc.index.hub)
     assert (hub[svc.n] == svc.n).all()
     assert int(svc.index.size[svc.n]) == 0
+
+
+# -- state-dict schema validation -------------------------------------------
+def _state(svc):
+    return {k: np.asarray(v) for k, v in svc.state_dict().items()}
+
+
+def test_from_state_dict_round_trips(svc):
+    svc2 = DynamicSPC.from_state_dict(svc.n, _state(svc))
+    assert to_ref(svc2.index).labels == to_ref(svc.index).labels
+    assert svc2.version == svc.version
+
+
+def test_from_state_dict_rejects_missing_key(svc):
+    state = _state(svc)
+    del state["index.cnt"]
+    with pytest.raises(ValueError, match="index.cnt"):
+        DynamicSPC.from_state_dict(svc.n, state)
+
+
+@pytest.mark.parametrize("key", ["graph.dst", "index.dist", "index.cnt",
+                                 "index.size", "index.cnt_sum"])
+def test_from_state_dict_rejects_truncated_leaf(svc, key):
+    """Regression: a truncated array used to silently build a corrupt
+    service (gathers clamp into the dump row); now the offending key is
+    named."""
+    state = _state(svc)
+    state[key] = state[key][:-2]
+    with pytest.raises(ValueError, match=key.replace(".", r"\.")):
+        DynamicSPC.from_state_dict(svc.n, state)
+
+
+def test_from_state_dict_rejects_wrong_n(svc):
+    with pytest.raises(ValueError, match="index.hub"):
+        DynamicSPC.from_state_dict(svc.n + 3, _state(svc))
+
+
+def test_from_state_dict_rejects_bad_m2_and_dtype(svc):
+    state = _state(svc)
+    state["graph.m2"] = np.int32(state["graph.src"].shape[0] + 2)
+    with pytest.raises(ValueError, match="graph.m2"):
+        DynamicSPC.from_state_dict(svc.n, state)
+    state = _state(svc)
+    state["index.dist"] = state["index.dist"].astype(np.float32)
+    with pytest.raises(ValueError, match="index.dist"):
+        DynamicSPC.from_state_dict(svc.n, state)
+    state = _state(svc)
+    state["version"] = np.int64(-4)
+    with pytest.raises(ValueError, match="version"):
+        DynamicSPC.from_state_dict(svc.n, state)
+
+
+def test_from_state_dict_accepts_legacy_dict(svc):
+    """Pre-cached-bound state dicts (no cnt_sum / version) must load,
+    rebuilding the cache from the stored counts."""
+    from repro.core.labels import recompute_cnt_sum
+    state = _state(svc)
+    del state["index.cnt_sum"]
+    del state["version"]
+    svc2 = DynamicSPC.from_state_dict(svc.n, state)
+    assert svc2.version == 0
+    np.testing.assert_array_equal(
+        np.asarray(svc2.index.cnt_sum),
+        np.asarray(recompute_cnt_sum(svc2.index.cnt)))

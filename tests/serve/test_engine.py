@@ -231,7 +231,55 @@ def test_sharded_serving_single_device(dynamic_service):
     d, c = eng.query_batch(svc.index, s, t, route="merge")
     np.testing.assert_array_equal(np.asarray(d_sh), np.asarray(d))
     np.testing.assert_array_equal(np.asarray(c_sh), np.asarray(c))
-    assert eng.stats.routes["sharded[data]"] == 1
+    # the executed core is recorded, comparable with single-device "merge"
+    assert eng.stats.routes["sharded[data]:merge"] == 1
+
+
+def test_sharded_serve_validates_route(dynamic_service):
+    """Regression: the sharded closure used to skip the route validation
+    that query_batch performs and silently ignored the engine's
+    configured route."""
+    import jax
+    from jax.sharding import Mesh
+
+    svc = dynamic_service
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    serve = QueryEngine().sharded(mesh)
+    with pytest.raises(ValueError, match="unknown route"):
+        serve(svc.index, [0], [1], route="bogus")
+    with pytest.raises(ValueError, match="sharded"):
+        serve(svc.index, [0], [1], route="pallas")
+    # an engine *configured* for a route the sharded path cannot honor
+    # must refuse too, instead of silently serving merge
+    serve_tbl = QueryEngine(route="table").sharded(mesh)
+    with pytest.raises(ValueError, match="sharded"):
+        serve_tbl(svc.index, [0], [1])
+    eng = QueryEngine(route="merge")
+    d, c = eng.sharded(mesh)(svc.index, [0], [0])
+    assert (int(d[0]), int(c[0])) == (0, 1)
+
+
+def test_empty_batch_early_returns(dynamic_service):
+    """Regression: B=0 used to pad up to the smallest bucket, dispatch 8
+    dump rows, and record a batch of 0 queries in the stats."""
+    import jax
+    from jax.sharding import Mesh
+
+    svc = dynamic_service
+    eng = QueryEngine()
+    for route in (None, "merge", "table", "pallas"):
+        d, c = eng.query_batch(svc.index, [], [], route=route)
+        assert d.shape == (0,) and c.shape == (0,)
+        assert d.dtype == jnp.int32 and c.dtype == jnp.int64
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    d, c = eng.sharded(mesh)(svc.index, [], [])
+    assert d.shape == (0,) and c.shape == (0,)
+    assert eng.stats.batches == 0 and eng.stats.queries == 0
+    assert eng.stats.routes == {}
+    # a bad route still raises on an empty batch (validated before the
+    # early return)
+    with pytest.raises(ValueError):
+        eng.query_batch(svc.index, [], [], route="bogus")
 
 
 def test_engine_rejects_unknown_route(dynamic_service):
@@ -249,5 +297,8 @@ def test_stats_dataclass_shape():
     st = ServeStats()
     st.count("merge", 5)
     st.count("merge", 3)
+    st.count_version(4, 5)
+    st.count_version(4, 3)
     assert dataclasses.asdict(st) == {
-        "queries": 8, "batches": 2, "routes": {"merge": 2}}
+        "queries": 8, "batches": 2, "routes": {"merge": 2},
+        "versions": {4: 8}}
