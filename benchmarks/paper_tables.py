@@ -27,6 +27,10 @@ configurable size and reports the same *quantities* the paper reports.
                through the versioned SnapshotStore while the updater
                publishes, vs the blocking-swap baseline where serving
                waits for every update chunk.
+  service_table -- (beyond-paper) the SPCService façade end-to-end:
+               qps under concurrent ingest through the bounded submit
+               queue vs the hand-wired store path it replaces (the
+               façade must not tax the PR 4 refresh-under-load win).
 
 Each function returns a list of dict rows and prints CSV.  The JAX path
 (``DynamicSPC``) is the system under test; ``refimpl`` is the
@@ -551,7 +555,9 @@ def publish_table(n=300, m=800, n_events=24, update_batch=8,
                                  batch_size=update_batch)
                 one_batch()
         elapsed = _timer() - t0
-        served = eng.stats.queries
+        # frozen cross-thread view: never iterate live stats dicts while
+        # the updater/replica threads are still counting
+        served = eng.stats.snapshot().queries
         return {
             "mode": mode, "events": len(events),
             "versions_published": int(store.version),
@@ -567,6 +573,113 @@ def publish_table(n=300, m=800, n_events=24, update_batch=8,
     rows[-1]["qps_vs_blocking"] = round(
         rows[-1]["qps"] / max(rows[0]["qps"], 1e-9), 2)
     _print_rows("publish_refresh_under_load", rows)
+    return rows
+
+
+# -------------------------------------------------------------------------
+def service_table(n=300, m=800, n_events=24, update_batch=8,
+                  query_batch=128, queue_size=2, reps=3,
+                  seed=10) -> List[Dict]:
+    """End-to-end qps under concurrent ingest through the ``SPCService``
+    façade vs the hand-wired PR 4 store path it deprecates (caller-owned
+    updater thread + ``attach_store`` + ``serve_from``).
+
+    Same event stream, same query generator, same wall-clock window
+    (the full ingest duration); both paths serve pinned snapshots while
+    publishes land, so the façade column shows what the lifecycle /
+    consistency layer costs -- the acceptance bound is qps no worse
+    than the store path (``qps_vs_store`` ~ 1).  The window is tens of
+    milliseconds at fast-mode scale, so each path reports its best of
+    ``reps`` runs (scheduler noise otherwise dominates the ratio)."""
+    import threading
+
+    from repro.serve import QueryEngine, SPCService
+
+    edges = random_graph_edges(n, m, seed=seed)
+    events = graph_stream(edges, n, 3 * n_events // 4,
+                          n_events - 3 * n_events // 4, seed=seed)
+    # shared compile caches: warm update + serve executables once so
+    # neither timed path pays compiles the other skips
+    warm = DynamicSPC(n, edges, l_cap=32)
+    warm.apply_events(events, batch_size=update_batch)
+
+    def serve_loop(serve, keep_going, rng):
+        served = 0
+        while keep_going():
+            s = rng.integers(0, n, query_batch)
+            d, _ = serve(s, rng.integers(0, n, query_batch))
+            d.block_until_ready()
+            served += query_batch
+        return served
+
+    def run_store() -> Dict:
+        # the legacy wiring: caller-owned updater thread + serve_from
+        svc = DynamicSPC(n, edges, l_cap=32)
+        eng = QueryEngine()
+        store = svc.attach_store()
+        serve = eng.serve_from(store)
+        serve(np.zeros(query_batch, np.int32),
+              np.zeros(query_batch, np.int32))
+        failure = []
+
+        def updater():
+            try:
+                for lo in range(0, len(events), update_batch):
+                    svc.apply_events(events[lo:lo + update_batch],
+                                     batch_size=update_batch)
+            except BaseException as e:  # surfaced after the window
+                failure.append(e)
+
+        th = threading.Thread(target=updater)
+        t0 = _timer()
+        th.start()
+        served = serve_loop(serve, th.is_alive,
+                            np.random.default_rng(seed))
+        th.join()
+        elapsed = _timer() - t0
+        if failure:
+            raise failure[0]
+        return {"path": "store_serve_from", "events": len(events),
+                "versions_published": int(store.version),
+                "queries_served": served,
+                "elapsed_s": round(elapsed, 4),
+                "qps": round(served / elapsed, 1)}
+
+    def run_service() -> Dict:
+        # the façade: bounded async ingest + pinned reader, one object
+        with SPCService(n, edges, l_cap=32, update_batch=update_batch,
+                        queue_size=queue_size) as service:
+            serve = service.reader()
+            serve(np.zeros(query_batch, np.int32),
+                  np.zeros(query_batch, np.int32))
+
+            def feeder():  # blocks on the bounded queue (backpressure)
+                for lo in range(0, len(events), update_batch):
+                    service.submit(events[lo:lo + update_batch])
+
+            th = threading.Thread(target=feeder)
+            t0 = _timer()
+            th.start()
+            served = serve_loop(
+                serve, lambda: th.is_alive() or service.pending,
+                np.random.default_rng(seed))
+            th.join()
+            service.drain()
+            elapsed = _timer() - t0
+            view = service.stats()       # frozen cross-thread snapshot
+            return {"path": "spc_service", "events": len(events),
+                    "versions_published": int(view["version"]),
+                    "queries_served": served,
+                    "elapsed_s": round(elapsed, 4),
+                    "qps": round(served / elapsed, 1)}
+
+    def best(run) -> Dict:
+        return max((run() for _ in range(reps)), key=lambda r: r["qps"])
+
+    rows = [best(run_store), best(run_service)]
+    rows[-1]["qps_vs_store"] = round(
+        rows[-1]["qps"] / max(rows[0]["qps"], 1e-9), 2)
+    _print_rows("service_facade_under_ingest", rows)
     return rows
 
 

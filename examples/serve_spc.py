@@ -1,18 +1,19 @@
-"""Query-server loop: an updater thread publishing versioned snapshots
-while a serving replica answers continuously from the store.
+"""Query serving through the SPCService façade: async ingest with
+backpressure on the write side, explicit consistency on the read side.
 
-The DSPC premise end-to-end, now with the update -> serve coordination
-made explicit: a ``DynamicSPC`` updater thread ingests a mixed
-edge-event stream in batched chunks (``hyb_spc_batch``, one jitted
-dispatch per chunk) and publishes each committed chunk as a versioned
-snapshot into a ``SnapshotStore``; the main thread is a serving replica
-that pins ``store.current()`` per batch through
-``QueryEngine.serve_from`` -- queries keep flowing *during* updates
-instead of waiting for them, a publish never touches an in-flight
-batch, and the 2^24 exactness routing bound is read off the pinned
-snapshot's cached ``cnt_sum`` field.
+The DSPC premise end-to-end, consumed the way the public API intends:
+ONE object -- ``repro.serve.SPCService`` -- owns the updater thread, the
+versioned snapshot store and the serving replicas.  A feeder thread
+pushes mixed edge-event chunks through ``service.submit`` (bounded
+queue: a full queue blocks the feeder, never the readers); the main
+thread is a serving replica on a ``pinned`` reader, so every batch pins
+one published snapshot and queries keep flowing *during* updates.  At
+the end a ``read_your_writes`` reader demonstrates the stronger
+consistency level: it blocks until the published version covers the
+last accepted submit ticket before answering.
 
 Run:  PYTHONPATH=src python examples/serve_spc.py [--n 300 --m 900]
+      PYTHONPATH=src python examples/serve_spc.py --fast   # CI smoke
 """
 
 import argparse
@@ -21,10 +22,10 @@ import time
 
 import numpy as np
 
-from repro.core.dynamic import DynamicSPC
 from repro.core.graph import INF
 from repro.data import graph_stream, random_graph_edges
-from repro.serve import QueryEngine, ServeStats
+from repro.serve import SPCService
+from repro.serve.routing import KINDS
 
 
 def main():
@@ -35,71 +36,87 @@ def main():
     ap.add_argument("--deletes", type=int, default=6)
     ap.add_argument("--update-batch", type=int, default=8)
     ap.add_argument("--query-batch", type=int, default=128)
+    ap.add_argument("--queue-size", type=int, default=2,
+                    help="ingest queue bound (the backpressure point)")
     ap.add_argument("--route", default="auto",
-                    choices=list(QueryEngine.ROUTES))
+                    choices=[k for k in KINDS if k != "sharded"])
     ap.add_argument("--checkpoint-dir", default=None,
                     help="publish -> durable snapshot directory")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny sizes for the CI examples smoke step")
     args = ap.parse_args()
+    if args.fast:
+        args.n, args.m = 80, 200
+        args.inserts, args.deletes = 6, 3
+        args.query_batch = 32
 
     edges = random_graph_edges(args.n, args.m, seed=0)
-    print(f"building index: n={args.n} m={len(edges)}")
+    print(f"building service: n={args.n} m={len(edges)}")
     t0 = time.perf_counter()
-    svc = DynamicSPC(args.n, edges, l_cap=32)
+    service = SPCService(args.n, edges, l_cap=32, route=args.route,
+                         update_batch=args.update_batch,
+                         queue_size=args.queue_size,
+                         checkpoint_dir=args.checkpoint_dir)
     print(f"  built in {time.perf_counter() - t0:.2f}s, "
-          f"{svc.index_entries()} entries")
-
-    store = svc.attach_store(checkpoint_dir=args.checkpoint_dir)
-    engine = QueryEngine(route=args.route)
-    serve = engine.serve_from(store)
+          f"{service.spc.index_entries()} entries")
     events = graph_stream(edges, args.n, args.inserts, args.deletes, seed=1)
     rng = np.random.default_rng(2)
 
-    # warm the serving compile cache before the loop (steady-state us),
-    # then reset the counters so stats reflect only served traffic
-    serve([0], [0])
-    s = rng.integers(0, args.n, args.query_batch)
-    serve(s, s)
-    engine.stats = ServeStats()
-
-    # -- updater thread: replay chunks, publish one version per chunk ----
-    chunk_times = []
-
-    def updater():
-        for lo in range(0, len(events), args.update_batch):
-            t0 = time.perf_counter()
-            svc.apply_events(events[lo:lo + args.update_batch],
-                             batch_size=args.update_batch)
-            chunk_times.append(time.perf_counter() - t0)
-
-    th = threading.Thread(target=updater)
-    t_start = time.perf_counter()
-    th.start()
-
-    # -- serving replica: pin a snapshot per batch, never block on updates
-    while th.is_alive():
+    with service:
+        serve = service.reader()          # pinned: never waits on ingest
+        # warm the serving compile cache before the loop (steady-state us)
+        serve([0], [0])
         s = rng.integers(0, args.n, args.query_batch)
-        t = rng.integers(0, args.n, args.query_batch)
-        t0 = time.perf_counter()
-        d, c = serve(s, t)
-        d.block_until_ready()
-        t_q = time.perf_counter() - t0
-        v = max(engine.stats.versions)  # version this batch pinned
-        k = int(np.argmin(np.asarray(d)))
-        dk = "inf" if int(d[k]) >= int(INF) else int(d[k])
-        print(f"  v{v:02d} | {args.query_batch} queries in "
-              f"{1e3 * t_q:.2f}ms ({1e6 * t_q / args.query_batch:.1f}us/q) "
-              f"e.g. spc({int(s[k])},{int(t[k])})=({dk},{int(c[k])})")
-    th.join()
-    elapsed = time.perf_counter() - t_start
-    store.wait()
+        t = s  # bound even if ingest outruns the first loop iteration
+        serve(s, t)
 
-    print(f"replayed {len(events)} events in {len(chunk_times)} chunks "
-          f"(avg {np.mean(chunk_times):.3f}s/chunk); published "
-          f"version {store.version} | served {engine.stats.queries} "
-          f"queries across versions {sorted(engine.stats.versions)} "
-          f"in {elapsed:.2f}s")
-    print(f"update stats: {svc.stats}")
-    print(f"serving stats: {engine.stats}")
+        # -- feeder thread: chunks through the bounded ingest queue ------
+        def feeder():
+            for lo in range(0, len(events), args.update_batch):
+                service.submit(events[lo:lo + args.update_batch])
+
+        th = threading.Thread(target=feeder)
+        t_start = time.perf_counter()
+        th.start()
+
+        # -- serving replica: pin a snapshot per batch, never block ------
+        served = 0
+        while th.is_alive() or service.pending:
+            s = rng.integers(0, args.n, args.query_batch)
+            t = rng.integers(0, args.n, args.query_batch)
+            t0 = time.perf_counter()
+            d, c = serve(s, t)
+            d.block_until_ready()
+            t_q = time.perf_counter() - t0
+            served += args.query_batch
+            k = int(np.argmin(np.asarray(d)))
+            dk = "inf" if int(d[k]) >= int(INF) else int(d[k])
+            print(f"  v{serve.last_version:02d} | {args.query_batch} "
+                  f"queries in {1e3 * t_q:.2f}ms "
+                  f"({1e6 * t_q / args.query_batch:.1f}us/q) "
+                  f"e.g. spc({int(s[k])},{int(t[k])})=({dk},{int(c[k])})")
+        th.join()
+        service.drain()
+        elapsed = time.perf_counter() - t_start
+
+        # -- read your writes: block until the last ticket is covered ----
+        rw = service.reader("read_your_writes")
+        rw(s[:4], t[:4])
+        last = service.accepted
+        print(f"read_your_writes pinned v{rw.last_version} >= "
+              f"v{service.ticket_version(last)} (ticket {last})")
+
+        stats = service.stats()           # one frozen cross-thread view
+        print(f"replayed {len(events)} events in {last} submits "
+              f"({stats['update'].batches} jitted dispatches); published "
+              f"version {stats['version']} | served {served} queries "
+              f"across versions "
+              f"{sorted(sum((list(v.versions) for v in stats['serve']), []))}"
+              f" in {elapsed:.2f}s")
+        print(f"update stats: {stats['update']}")
+        for i, view in enumerate(stats["serve"]):
+            if view.batches:
+                print(f"replica[{i}] stats: {view}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,12 @@
 """dspc: the paper's own workload (dynamic SPC-Index maintenance) as a
-config next to the assigned pool, so ``--arch dspc`` drives the core."""
+config next to the assigned pool, so ``--arch dspc`` drives the core.
+
+The config also carries the serving-façade knobs consumed by
+``repro.serve.SPCService.from_config`` (ingest chunking, queue bound,
+replica count, default route policy), so the whole service stack builds
+from one shape -- ``SMOKE`` for CPU tests/CI, ``CONFIG`` for dry-run
+scale.
+"""
 
 import dataclasses
 
@@ -13,11 +20,17 @@ class DSPCArchConfig:
     m: int = 524288           # undirected edges
     l_cap: int = 64           # label capacity per vertex
     query_batch: int = 1_048_576
+    # -- SPCService knobs (repro.serve.service) -------------------------
+    update_batch: int = 64    # events per jitted apply_events chunk
+    queue_size: int = 8       # bounded ingest queue (backpressure point)
+    replicas: int = 2         # QueryEngine replicas readers round-robin
+    route: str = "auto"       # default RoutePolicy kind for readers
 
 
 CONFIG = DSPCArchConfig()
 SMOKE = DSPCArchConfig(name="dspc-smoke", n=64, m=160, l_cap=16,
-                       query_batch=256)
+                       query_batch=256, update_batch=8, queue_size=4,
+                       replicas=2)
 
 SPEC = ArchSpec(arch_id="dspc", family="dspc", config=CONFIG, smoke=SMOKE,
                 shapes=DSPC_SHAPES,

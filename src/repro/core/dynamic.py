@@ -35,6 +35,7 @@ recoverable, shardable form.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Iterable, Sequence, Tuple
 
 import jax
@@ -56,6 +57,23 @@ from repro.core.labels import SPCIndex
 DEFAULT_BATCH = 64
 
 
+@dataclasses.dataclass(frozen=True)
+class UpdateStatsView:
+    """Point-in-time frozen copy of an ``UpdateStats`` (``snapshot``)."""
+
+    inserts: int
+    deletions: int
+    isolated_fast_path: int
+    label_regrows: int
+    edge_regrows: int
+    batches: int
+    batched_events: int
+
+    @property
+    def events_per_batch(self) -> float:
+        return self.batched_events / self.batches if self.batches else 0.0
+
+
 @dataclasses.dataclass
 class UpdateStats:
     inserts: int = 0
@@ -66,6 +84,26 @@ class UpdateStats:
     edge_regrows: int = 0
     batches: int = 0          # jitted hybrid-engine dispatches
     batched_events: int = 0   # events carried by those dispatches
+
+    def __post_init__(self):
+        # one updater thread writes, but serving/monitoring threads read
+        # while it counts (the service façade's stats endpoint); all
+        # increments and snapshots go through this lock
+        self._lock = threading.Lock()
+
+    def bump(self, **deltas: int) -> None:
+        """Lock-guarded counter increments (the only write path)."""
+        with self._lock:
+            for key, d in deltas.items():
+                setattr(self, key, getattr(self, key) + d)
+
+    def snapshot(self) -> UpdateStatsView:
+        """Lock-guarded frozen copy -- what cross-thread readers use
+        instead of touching the live counters mid-increment."""
+        with self._lock:
+            return UpdateStatsView(**{
+                f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)})
 
     @property
     def events_per_batch(self) -> float:
@@ -110,7 +148,7 @@ class DynamicSPC:
             if int(idx.overflow) == 0:
                 return idx
             l_cap *= 2
-            self.stats.label_regrows += 1
+            self.stats.bump(label_regrows=1)
 
     def rebuild(self) -> None:
         """Reconstruction baseline (what the paper's HP-SPC rerun does)."""
@@ -142,6 +180,11 @@ class DynamicSPC:
         Only *committed* states publish -- a chunk that overflows and
         replays never exposes its intermediate index, readers stay
         pinned on version k until k+1's retry succeeds.
+
+        Legacy wiring: ``repro.serve.SPCService`` owns this driver, the
+        store and the serving replicas behind one lifecycle (async
+        ingest queue, explicit read consistency); prefer the façade over
+        hand-rolling attach_store + updater threads.
         """
         if store is None:
             from repro.serve.publish import SnapshotStore
@@ -202,8 +245,8 @@ class DynamicSPC:
                 self.graph, self.index = g2, idx2
                 break
             self.index = L.repad(self.index, self.index.l_cap * 2)
-            self.stats.label_regrows += 1
-        self.stats.inserts += 1
+            self.stats.bump(label_regrows=1)
+        self.stats.bump(inserts=1)
         self._commit()
 
     def delete_edge(self, a: int, b: int) -> None:
@@ -217,7 +260,7 @@ class DynamicSPC:
             # is never a hub elsewhere -- reset its row to the self label.
             self.graph = G.delete_edge(self.graph, a, b)
             self.index = L.reset_isolated_row(self.index, hi)
-            self.stats.isolated_fast_path += 1
+            self.stats.bump(isolated_fast_path=1)
         else:
             # the isolated case was excluded host-side above, so both
             # modes jit the same plain dec_spc body (shared compile cache)
@@ -229,8 +272,8 @@ class DynamicSPC:
                     self.graph, self.index = g2, idx2
                     break
                 self.index = L.repad(self.index, self.index.l_cap * 2)
-                self.stats.label_regrows += 1
-        self.stats.deletions += 1
+                self.stats.bump(label_regrows=1)
+        self.stats.bump(deletions=1)
         self._commit()
 
     def insert_edges(self, edges) -> None:
@@ -253,8 +296,8 @@ class DynamicSPC:
                 self.graph, self.index = g2, idx2
                 break
             self.index = L.repad(self.index, self.index.l_cap * 2)
-            self.stats.label_regrows += 1
-        self.stats.inserts += len(edges)
+            self.stats.bump(label_regrows=1)
+        self.stats.bump(inserts=len(edges))
         self._commit()
 
     def insert_vertex(self) -> int:
@@ -385,7 +428,7 @@ class DynamicSPC:
             self.graph = self._pad_for_mesh(
                 G.ensure_capacity(self.graph, 2 * n_ins))
             if self.graph.cap_e != cap_before:
-                self.stats.edge_regrows += 1
+                self.stats.bump(edge_regrows=1)
             g0, idx0 = self.graph, self.index  # pre-chunk snapshot
             ev = jnp.asarray(arr)
             while True:
@@ -395,11 +438,10 @@ class DynamicSPC:
                     break
                 self.graph = g0
                 self.index = L.repad(idx0, self.index.l_cap * 2)
-                self.stats.label_regrows += 1
-            self.stats.batches += 1
-            self.stats.batched_events += len(chunk)
-            self.stats.inserts += n_ins
-            self.stats.deletions += len(chunk) - n_ins
+                self.stats.bump(label_regrows=1)
+            self.stats.bump(batches=1, batched_events=len(chunk),
+                            inserts=n_ins,
+                            deletions=len(chunk) - n_ins)
             # one publish per committed chunk: replicas reading through
             # an attached store refresh at chunk granularity, never
             # seeing a mid-retry intermediate

@@ -1,4 +1,16 @@
-"""Query-serving subsystem: one engine in front of every SPC read path.
+"""Query-serving subsystem: one façade in front of the whole system.
+
+**Public API (stable):** ``SPCService`` -- the config-driven façade
+that owns the updater (``DynamicSPC``, optionally mesh-sharded), the
+versioned ``SnapshotStore`` and N ``QueryEngine`` replicas behind one
+lifecycle.  Writes go through ``service.submit(events)`` (bounded async
+ingest queue, backpressure, failures surfaced on the next call); reads
+go through ``service.reader(consistency=...)`` with an explicit
+consistency contract (pinned / read-your-writes / at_version); routes
+are ``RoutePolicy`` value objects validated at construction;
+``SPCService.from_config`` builds the stack from ``configs/dspc.py``.
+
+The underlying layers remain importable for composition and tests:
 
 ``QueryEngine`` unifies the three intersection implementations (eager
 L x L table, jitted int64 sorted-merge, Pallas TPU kernel) behind a
@@ -7,14 +19,23 @@ single routed, bucket-padded, compile-cached entry point; see
 
 ``SnapshotStore`` (``repro.serve.publish``) is the update -> serve
 coordination layer: double-buffered, version-counted index snapshots
-that the updater publishes and serving replicas pin per batch
-(``QueryEngine.serve_from``), with an optional publish -> checkpoint
-durability hook.
+that the updater publishes and serving replicas pin per batch, with an
+optional publish -> checkpoint durability hook.
+
+Hand-wiring these (``DynamicSPC.attach_store`` + your own updater
+thread + ``QueryEngine.serve_from``) is the *legacy* consumption path;
+new callers should go through ``SPCService``.
 """
 
 from repro.serve.engine import (DEFAULT_BUCKETS, QueryEngine, ServeStats,
-                                bucket_size)
+                                ServeStatsView, bucket_size)
 from repro.serve.publish import Snapshot, SnapshotStore, load_snapshot
+from repro.serve.routing import RoutePolicy
+from repro.serve.service import (CONSISTENCY_LEVELS, SPCService,
+                                 UpdaterError)
 
-__all__ = ["QueryEngine", "ServeStats", "DEFAULT_BUCKETS", "bucket_size",
+__all__ = ["SPCService", "RoutePolicy", "UpdaterError",
+           "CONSISTENCY_LEVELS",
+           "QueryEngine", "ServeStats", "ServeStatsView",
+           "DEFAULT_BUCKETS", "bucket_size",
            "Snapshot", "SnapshotStore", "load_snapshot"]

@@ -50,7 +50,8 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, Tuple
+import types
+from typing import Dict, Mapping, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +60,7 @@ import numpy as np
 from repro.core import query as Q
 from repro.core.labels import SPCIndex
 from repro.kernels.spc_query.ops import exact_query_batch
+from repro.serve.routing import RoutePolicy
 
 #: Static batch shapes the jit cache may hold.  Batches larger than the
 #: last bucket are padded to the next multiple of it.
@@ -90,6 +92,21 @@ def _serve_table(idx: SPCIndex, s, t):
     return Q.table_rows(*rows, jnp.int32(idx.n + 1))
 
 
+@dataclasses.dataclass(frozen=True)
+class ServeStatsView:
+    """Point-in-time frozen copy of a ``ServeStats`` (see ``snapshot``).
+
+    The dict fields are read-only mapping proxies over fresh copies, so
+    a view taken mid-traffic can be iterated, serialized or compared
+    while replica threads keep counting on the live object.
+    """
+
+    queries: int
+    batches: int
+    routes: Mapping[str, int]
+    versions: Mapping[int, int]
+
+
 @dataclasses.dataclass
 class ServeStats:
     queries: int = 0          # real (un-padded) queries answered
@@ -114,6 +131,17 @@ class ServeStats:
         with self._lock:
             self.versions[version] = self.versions.get(version, 0) + queries
 
+    def snapshot(self) -> ServeStatsView:
+        """Lock-guarded frozen copy.  Reading the live ``routes`` /
+        ``versions`` dicts while replica threads count is a data race
+        (dict iteration raises ``RuntimeError`` on concurrent insert);
+        every cross-thread stats read goes through here."""
+        with self._lock:
+            return ServeStatsView(
+                queries=self.queries, batches=self.batches,
+                routes=types.MappingProxyType(dict(self.routes)),
+                versions=types.MappingProxyType(dict(self.versions)))
+
 
 class QueryEngine:
     """Routed, bucket-padded serving front end over one SPCIndex pytree.
@@ -125,8 +153,18 @@ class QueryEngine:
 
     ROUTES = ("auto", "merge", "table", "pallas")
 
-    def __init__(self, *, route: str = "auto", buckets=DEFAULT_BUCKETS,
+    def __init__(self, *, route: str | RoutePolicy = "auto",
+                 buckets=DEFAULT_BUCKETS,
                  block_b: int = 128, interpret: bool | None = None) -> None:
+        if isinstance(route, RoutePolicy):
+            # a policy carries the kernel knobs; explicit kwargs would
+            # silently fight it, so the policy wins wholesale.  A
+            # sharded policy builds the merge core engine -- the
+            # multi-device binding happens through .sharded(mesh)
+            # (SPCService.reader does exactly that).
+            block_b = route.block_b
+            interpret = route.interpret
+            route = route.engine_route
         if route not in self.ROUTES:
             raise ValueError(f"unknown route {route!r}; want one of "
                              f"{self.ROUTES}")
@@ -158,6 +196,24 @@ class QueryEngine:
         t = np.asarray(t).reshape(-1)  # an int32 cast could wrap huge ids
         if s.shape != t.shape:
             raise ValueError(f"s/t shape mismatch: {s.shape} vs {t.shape}")
+        if isinstance(route, RoutePolicy):
+            # a per-call policy must actually bind, not silently
+            # degrade: sharded needs the multi-device path, and kernel
+            # knobs live on the engine, so a mismatch is an error
+            if route.needs_mesh:
+                raise ValueError(
+                    "sharded RoutePolicy cannot be evaluated on the "
+                    "single-device query path; bind it through "
+                    "QueryEngine.sharded(mesh) or SPCService.reader")
+            if route.kind in ("auto", "pallas") and \
+                    (route.block_b, route.interpret) != (self.block_b,
+                                                         self.interpret):
+                raise ValueError(
+                    f"policy kernel knobs (block_b={route.block_b}, "
+                    f"interpret={route.interpret}) differ from this "
+                    f"engine's ({self.block_b}, {self.interpret}); "
+                    f"construct a QueryEngine(route=<policy>) instead")
+            route = route.engine_route
         route = route or self.route
         if route not in self.ROUTES:
             raise ValueError(f"unknown route {route!r}; want one of "
@@ -227,7 +283,8 @@ class QueryEngine:
             # same route contract as query_batch: unknown names raise,
             # and a configured route the sharded path cannot honor is an
             # error instead of being silently ignored
-            route_ = route or self.route
+            route_ = (route.engine_route if isinstance(route, RoutePolicy)
+                      else route) or self.route
             if route_ not in self.ROUTES:
                 raise ValueError(f"unknown route {route_!r}; want one of "
                                  f"{self.ROUTES}")
@@ -262,6 +319,12 @@ class QueryEngine:
         (``repro.serve.publish``): each batch pins ``store.current()``
         for its whole duration, so a concurrent publish of version k+1
         never touches a batch answering from version k.
+
+        Legacy wiring: prefer ``repro.serve.SPCService.reader`` -- the
+        service façade owns the store, adds explicit consistency levels
+        (pinned / read-your-writes / at_version) and surfaces updater
+        failures; this method stays for callers managing their own
+        store.
 
         Returns ``serve(s, t, route=None) -> (dist[B], cnt[B])``.  With
         ``mesh=`` the batch is answered through :meth:`sharded` replicas

@@ -41,7 +41,11 @@ Producer side: ``DynamicSPC.attach_store()`` publishes after every
 committed mutation / event chunk -- and only committed ones, so an
 overflow-retry mid-chunk never exposes its intermediate index.  Consumer
 side: ``QueryEngine.serve_from(store)`` pins ``store.current()`` per
-batch (single- or multi-device).  Cf. PSPC's replicated hub-label
+batch (single- or multi-device).  Both ends are normally owned by the
+``repro.serve.SPCService`` façade, which layers the explicit
+consistency contract (read-your-writes / at_version) on top of this
+store's version counter; wire them by hand only when composing a
+custom topology.  Cf. PSPC's replicated hub-label
 serving workers (arXiv:2212.00977) and Farhan et al.'s argument that the
 label structure should carry the metadata queries need (arXiv:2102.08529).
 """
