@@ -684,6 +684,108 @@ def service_table(n=300, m=800, n_events=24, update_batch=8,
 
 
 # -------------------------------------------------------------------------
+def frontdoor_table(n=300, m=800, n_events=24, update_batch=8,
+                    readers=8, queries_per_reader=200, reps=3,
+                    seed=11) -> List[Dict]:
+    """Sustained single-pair qps + p50/p99 latency for ``readers``
+    concurrent caller threads under a concurrent writer: each caller
+    owning a service reader and dispatching its own 1-pair batches
+    (``caller_batched``) vs the same callers going through the
+    coalescing ``FrontDoor`` (``frontdoor``), which folds whatever is
+    pending into one padded engine dispatch.
+
+    Both rows serve pinned snapshots from the same service shape while
+    the writer's publishes land, so the ratio isolates what server-side
+    coalescing buys at the front door: N single-pair dispatches become
+    ~N/mean_fill batch dispatches on the same bucket ladder.  Each row
+    reports its best of ``reps`` windows (the window is short at fast
+    scale; scheduler noise otherwise dominates), latencies pooled over
+    every request of the winning window."""
+    import threading
+
+    from repro.serve import SPCService
+
+    edges = random_graph_edges(n, m, seed=seed)
+    events = graph_stream(edges, n, 3 * n_events // 4,
+                          n_events - 3 * n_events // 4, seed=seed)
+    # shared compile caches: warm the update + single-pair serve
+    # executables once so neither timed row pays the other's compiles
+    warm = DynamicSPC(n, edges, l_cap=32)
+    warm.apply_events(events, batch_size=update_batch)
+
+    def run(mode: str) -> Dict:
+        with SPCService(n, edges, l_cap=32, update_batch=update_batch) \
+                as service:
+            service.reader()([0], [1])            # warm bucket-8 dispatch
+            door = None
+            if mode == "frontdoor":
+                # few dispatchers + a short gather window: each claim
+                # folds several callers' pairs into one dispatch, and a
+                # reader stalled behind the updater's XLA compute never
+                # serializes the whole pipeline
+                door = service.frontdoor(max_live_batches=4,
+                                         dispatchers=2,
+                                         gather_window_s=0.002).start()
+            latencies = [[] for _ in range(readers)]
+
+            def caller(k: int):
+                rng = np.random.default_rng(seed + k)
+                lat = latencies[k]
+                if door is not None:
+                    sess = door.session()
+                    ask = sess.query
+                else:
+                    serve = service.reader()      # own pinned reader
+                    ask = lambda a, b: serve([a], [b])[0].block_until_ready()
+                for _ in range(queries_per_reader):
+                    a = int(rng.integers(0, n))
+                    b = int(rng.integers(0, n))
+                    t0 = _timer()
+                    ask(a, b)
+                    lat.append(_timer() - t0)
+
+            def writer():
+                for lo in range(0, len(events), update_batch):
+                    service.submit(events[lo:lo + update_batch])
+
+            threads = [threading.Thread(target=caller, args=(k,))
+                       for k in range(readers)]
+            threads.append(threading.Thread(target=writer))
+            t0 = _timer()
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+            elapsed = _timer() - t0
+            service.drain()
+            pooled = np.asarray([x for lat in latencies for x in lat])
+            row = {"mode": mode, "readers": readers,
+                   "requests": int(pooled.size), "events": len(events),
+                   "elapsed_s": round(elapsed, 4),
+                   "qps": round(pooled.size / elapsed, 1),
+                   "p50_ms": round(float(np.percentile(pooled, 50)) * 1e3,
+                                   3),
+                   "p99_ms": round(float(np.percentile(pooled, 99)) * 1e3,
+                                   3)}
+            if door is not None:
+                st = door.stats()
+                row["batches"] = st["batches"]
+                row["mean_fill"] = round(st["mean_fill"], 2)
+                door.close()
+            return row
+
+    def best(mode: str) -> Dict:
+        return max((run(mode) for _ in range(reps)),
+                   key=lambda r: r["qps"])
+
+    rows = [best("caller_batched"), best("frontdoor")]
+    rows[-1]["qps_vs_caller_batched"] = round(
+        rows[-1]["qps"] / max(rows[0]["qps"], 1e-9), 2)
+    _print_rows("frontdoor_coalescing", rows)
+    return rows
+
+
+# -------------------------------------------------------------------------
 def table5(n=300, m=800, n_edges_tested=10, seed=5) -> List[Dict]:
     """Average SR/R set sizes (uses the reference implementation, whose
     sets are exact per Definition 3.10/3.12)."""

@@ -21,7 +21,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table4,figure7,figure8_9,figure10,"
                          "figure11,table5,hybrid,serving,dist_update,"
-                         "publish,service,kernels")
+                         "publish,service,frontdoor,kernels")
     args = ap.parse_args()
 
     wanted = set(args.only.split(",")) if args.only else None
@@ -76,6 +76,9 @@ def main() -> None:
                           n_events=12, update_batch=4, query_batch=64)
         service_rows = go("service", P.service_table, n=120, m=300,
                           n_events=12, update_batch=4, query_batch=64)
+        frontdoor_rows = go("frontdoor", P.frontdoor_table, n=120, m=300,
+                            n_events=12, update_batch=4, readers=8,
+                            queries_per_reader=80, reps=2)
     else:
         go("table4", P.table4)
         go("figure7", P.figure7)
@@ -88,6 +91,7 @@ def main() -> None:
         dist_rows = go("dist_update", P.dist_update_table)
         publish_rows = go("publish", P.publish_table)
         service_rows = go("service", P.service_table)
+        frontdoor_rows = go("frontdoor", P.frontdoor_table)
     root = pathlib.Path(__file__).resolve().parent.parent
     if hybrid_rows is not None:
         out = root / "BENCH_hybrid.json"
@@ -108,6 +112,10 @@ def main() -> None:
     if service_rows is not None:
         out = root / "BENCH_service.json"
         out.write_text(json.dumps(service_rows, indent=2) + "\n")
+        print(f"wrote {out}")
+    if frontdoor_rows is not None:
+        out = root / "BENCH_frontdoor.json"
+        out.write_text(json.dumps(frontdoor_rows, indent=2) + "\n")
         print(f"wrote {out}")
     go("kernels", lambda: (kernels_bench.query_kernel_vs_jnp(),
                            kernels_bench.segment_matmul_vs_segment_sum()))

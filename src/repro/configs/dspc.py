@@ -25,12 +25,18 @@ class DSPCArchConfig:
     queue_size: int = 8       # bounded ingest queue (backpressure point)
     replicas: int = 2         # QueryEngine replicas readers round-robin
     route: str = "auto"       # default RoutePolicy kind for readers
+    # -- FrontDoor knobs (repro.serve.frontdoor) ------------------------
+    max_live_batches: int = 4   # admission bound, in coalesced batches
+    dispatchers: int = 2        # coalescing dispatcher threads
+    deadline_s: float = 5.0     # default per-request SLO
+    frontdoor_batch: int = 256  # pairs per coalesced dispatch (bucket cap)
 
 
 CONFIG = DSPCArchConfig()
 SMOKE = DSPCArchConfig(name="dspc-smoke", n=64, m=160, l_cap=16,
                        query_batch=256, update_batch=8, queue_size=4,
-                       replicas=2)
+                       replicas=2, max_live_batches=2, dispatchers=2,
+                       deadline_s=10.0, frontdoor_batch=64)
 
 SPEC = ArchSpec(arch_id="dspc", family="dspc", config=CONFIG, smoke=SMOKE,
                 shapes=DSPC_SHAPES,

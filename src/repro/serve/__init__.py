@@ -6,9 +6,17 @@ versioned ``SnapshotStore`` and N ``QueryEngine`` replicas behind one
 lifecycle.  Writes go through ``service.submit(events)`` (bounded async
 ingest queue, backpressure, failures surfaced on the next call); reads
 go through ``service.reader(consistency=...)`` with an explicit
-consistency contract (pinned / read-your-writes / at_version); routes
-are ``RoutePolicy`` value objects validated at construction;
+consistency contract (pinned / read-your-writes / at_version), where
+read-your-writes is scoped to per-caller ``Session`` ticket handles;
+routes are ``RoutePolicy`` value objects validated at construction;
 ``SPCService.from_config`` builds the stack from ``configs/dspc.py``.
+
+``FrontDoor`` (``repro.serve.frontdoor``) sits on top for
+many-concurrent-caller traffic: per-caller ``FrontDoorSession`` handles
+submit single ``(s, t)`` queries that dispatcher threads coalesce into
+padded batches against the engine's bucket ladder, under
+``max_live_batches`` admission control (typed ``Overloaded`` /
+``DeadlineExceeded`` rejections) with per-session read-your-writes.
 
 The underlying layers remain importable for composition and tests:
 
@@ -28,14 +36,21 @@ new callers should go through ``SPCService``.
 """
 
 from repro.serve.engine import (DEFAULT_BUCKETS, QueryEngine, ServeStats,
-                                ServeStatsView, bucket_size)
+                                ServeStatsView, bucket_size,
+                                coalesce_pairs, split_rows)
+from repro.serve.frontdoor import (DeadlineExceeded, FrontDoor,
+                                   FrontDoorError, FrontDoorSession,
+                                   Overloaded)
 from repro.serve.publish import Snapshot, SnapshotStore, load_snapshot
 from repro.serve.routing import RoutePolicy
-from repro.serve.service import (CONSISTENCY_LEVELS, SPCService,
-                                 UpdaterError)
+from repro.serve.service import (CONSISTENCY_LEVELS, NO_TICKET, Session,
+                                 SPCService, UpdaterError)
 
-__all__ = ["SPCService", "RoutePolicy", "UpdaterError",
-           "CONSISTENCY_LEVELS",
+__all__ = ["SPCService", "Session", "NO_TICKET", "RoutePolicy",
+           "UpdaterError", "CONSISTENCY_LEVELS",
+           "FrontDoor", "FrontDoorSession", "FrontDoorError",
+           "Overloaded", "DeadlineExceeded",
            "QueryEngine", "ServeStats", "ServeStatsView",
            "DEFAULT_BUCKETS", "bucket_size",
+           "coalesce_pairs", "split_rows",
            "Snapshot", "SnapshotStore", "load_snapshot"]

@@ -76,6 +76,50 @@ def bucket_size(b: int, buckets=DEFAULT_BUCKETS) -> int:
     return -(-b // top) * top
 
 
+def coalesce_pairs(parts):
+    """Assemble heterogeneous per-request ``(s, t)`` pair lists into one
+    flat batch (the front door's coalescing step).
+
+    ``parts`` is a sequence of ``(s_i, t_i)`` array-likes of arbitrary
+    (possibly different) lengths.  Returns ``(s, t, offsets)`` where
+    ``s``/``t`` are the concatenated 1-D id arrays and
+    ``offsets[i]:offsets[i + 1]`` spans part ``i`` -- the mapping
+    :func:`split_rows` uses to scatter a batch's answers back per
+    request.  Ids keep their natural dtype: the engine's host-side
+    bounds check must see un-wrapped values, so no int32 cast here.
+    """
+    ss, ts, offsets = [], [], [0]
+    for k, (s, t) in enumerate(parts):
+        s = np.asarray(s).reshape(-1)
+        t = np.asarray(t).reshape(-1)
+        if s.shape != t.shape:
+            raise ValueError(
+                f"part {k}: s/t shape mismatch: {s.shape} vs {t.shape}")
+        ss.append(s)
+        ts.append(t)
+        offsets.append(offsets[-1] + s.shape[0])
+    if not ss:
+        return (np.empty(0, np.int32), np.empty(0, np.int32),
+                np.zeros(1, np.int64))
+    return (np.concatenate(ss), np.concatenate(ts),
+            np.asarray(offsets, np.int64))
+
+
+def split_rows(d, c, offsets):
+    """Scatter a coalesced batch's answers back per request: the inverse
+    of :func:`coalesce_pairs`.  Materializes the device arrays once and
+    returns a list of ``(dist_i, cnt_i)`` numpy views, one per part."""
+    d = np.asarray(d)
+    c = np.asarray(c)
+    if d.shape[0] != int(offsets[-1]) or c.shape[0] != int(offsets[-1]):
+        raise ValueError(
+            f"answers of {d.shape[0]}/{c.shape[0]} rows do not cover the "
+            f"coalesced batch of {int(offsets[-1])} pairs")
+    return [(d[int(offsets[i]):int(offsets[i + 1])],
+             c[int(offsets[i]):int(offsets[i + 1])])
+            for i in range(len(offsets) - 1)]
+
+
 #: The merge route IS the one fused jitted merge entry point of
 #: ``core.query`` (gather + sorted-merge in a single dispatch).
 _serve_merge = Q.batched_query_jit

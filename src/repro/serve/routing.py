@@ -29,7 +29,7 @@ values; ``RoutePolicy.coerce`` upgrades the legacy route strings.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Mapping, Tuple
 
 #: Kinds a policy may name.  The first four map 1:1 onto the engine's
 #: single-device routes; ``sharded`` selects the multi-device replica
@@ -115,7 +115,11 @@ class RoutePolicy:
     @classmethod
     def coerce(cls, route) -> "RoutePolicy":
         """Upgrade a route name (or None) to a policy; pass policies
-        through.  The migration shim for the legacy string API."""
+        through.  The migration shim for the legacy string API.
+
+        A mapping coerces too -- ``{"kind": "pallas", "block_b": 64}``
+        -- so config files and front-door knobs can carry the whole
+        route decision as plain data instead of only the kind string."""
         if route is None:
             return cls.auto()
         if isinstance(route, RoutePolicy):
@@ -124,6 +128,19 @@ class RoutePolicy:
             if route == "sharded":
                 return cls.sharded()   # default batch axes
             return cls(route)  # __post_init__ validates the kind
+        if isinstance(route, Mapping):
+            kw = dict(route)
+            kind = kw.pop("kind", "auto")
+            if "batch_axes" in kw:
+                kw["batch_axes"] = tuple(kw["batch_axes"])
+            try:
+                return cls(kind, **kw)
+            except TypeError:
+                known = [f.name for f in dataclasses.fields(cls)]
+                raise ValueError(
+                    f"route mapping has unknown keys "
+                    f"{sorted(set(kw) - set(known))}; want a subset of "
+                    f"{known}") from None
         raise ValueError(
             f"route must be a RoutePolicy or one of {KINDS}, got "
             f"{type(route).__name__} {route!r}")

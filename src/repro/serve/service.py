@@ -34,10 +34,24 @@ split of one writer from replicated hub-label readers:
   ``pinned``           the current *published* snapshot, pinned for the
                        whole batch; never waits on ingest (default)
   ``read_your_writes`` blocks until the published version covers the
-                       last accepted ``submit`` ticket, then pins --
-                       a reader that just wrote sees its own writes
+                       bound session's last ``submit`` ticket, then
+                       pins -- a caller that just wrote sees its own
+                       writes (and only waits on its OWN writes)
   ``at_version=k``     blocks until version >= k is published, then pins
   ===================  ====================================================
+
+* **Per-session read-your-writes.**  RYW tracking is delegated to
+  :class:`Session` handles (``service.session()``): a session records
+  the last ticket *it* submitted, and a reader bound to it
+  (``reader("read_your_writes", session=sess)``) waits for exactly that
+  ticket.  Waiting on the globally last accepted ticket instead -- the
+  pre-session behavior -- coupled every RYW reader to every other
+  caller's writes: a reader could block on (and be incorrectly
+  "covered" by) foreign ingest.  A reader built without a session binds
+  the service's *default* session, which tracks tickets from direct
+  ``service.submit`` calls -- the single-caller behavior, unchanged.
+  ``repro.serve.frontdoor`` builds its per-caller handles on the same
+  primitive.
 
 * **Routing policies.**  Routes are ``RoutePolicy`` value objects
   (``repro.serve.routing``) validated at construction -- auto / merge /
@@ -57,6 +71,7 @@ well-ordered.
 
 from __future__ import annotations
 
+import logging
 import queue as queue_lib
 import threading
 import time
@@ -67,13 +82,64 @@ from repro.serve.engine import DEFAULT_BUCKETS, QueryEngine
 from repro.serve.publish import SnapshotStore
 from repro.serve.routing import RoutePolicy
 
+_log = logging.getLogger(__name__)
+
 #: Declared read-consistency levels (see module doc).
 CONSISTENCY_LEVELS = ("pinned", "read_your_writes")
+
+#: The "nothing to wait for" ticket sentinel.  ``submit([])`` returns it
+#: (real tickets start at 1), a fresh :class:`Session` starts on it, and
+#: every read-your-writes wait keyed on it returns immediately.  The
+#: pre-sentinel behavior -- returning the current globally-last accepted
+#: ticket -- made an empty submit alias someone ELSE's write, so an RYW
+#: wait keyed on it blocked on foreign ingest.
+NO_TICKET = 0
 
 
 class UpdaterError(RuntimeError):
     """The background updater thread died; every subsequent service
     call raises this with the original exception chained (__cause__)."""
+
+
+class Session:
+    """Per-caller write-ticket scope: the read-your-writes unit.
+
+    A session records the last ticket accepted for *its own* submits
+    (``session.submit(events)`` == ``service.submit(events,
+    session=session)``); a reader bound to it waits for that ticket
+    only.  Two callers holding two sessions never wait on each other's
+    writes -- the isolation the global accepted-ticket wait could not
+    provide.  Thread-safe: a session may be shared by one caller's
+    writer and reader threads (``last_ticket`` advances monotonically).
+    """
+
+    def __init__(self, service: "SPCService") -> None:
+        self._service = service
+        self._lock = threading.Lock()
+        self._last = NO_TICKET
+
+    @property
+    def last_ticket(self) -> int:
+        """Last ticket this session submitted (``NO_TICKET`` if none)."""
+        with self._lock:
+            return self._last
+
+    def _record(self, ticket: int) -> None:
+        with self._lock:
+            if ticket > self._last:
+                self._last = ticket
+
+    def submit(self, events, *, timeout: float | None = None) -> int:
+        """``service.submit`` credited to this session (see there)."""
+        return self._service.submit(events, timeout=timeout, session=self)
+
+    def reader(self, consistency: str = "read_your_writes", **kwargs):
+        """A reader bound to this session (read-your-writes default)."""
+        return self._service.reader(consistency, session=self, **kwargs)
+
+    def wait_applied(self, timeout: float | None = None) -> None:
+        """Block until this session's last submit is applied+published."""
+        self._service.wait_for_ticket(self.last_ticket, timeout)
 
 
 class SPCService:
@@ -154,7 +220,10 @@ class SPCService:
                                      buckets=self._buckets)
                          for _ in range(replicas)]
         self._rr = 0                      # round-robin reader assignment
-        self._reader_lock = threading.Lock()   # guards _rr + _dedicated
+        # guards _rr + _dedicated + the lazy _default_reader build; an
+        # RLock because building the default reader re-enters through
+        # reader() -> _engine_for()
+        self._reader_lock = threading.RLock()
         self._dedicated: dict = {}        # (block_b, interpret) -> engine
         self.update_batch = update_batch
         self.wait_timeout = float(wait_timeout)
@@ -170,6 +239,9 @@ class SPCService:
         self._stop = threading.Event()
         self._closed = False
         self._default_reader = None
+        #: ticket scope for direct ``service.submit`` calls; explicit
+        #: per-caller scopes come from :meth:`session`
+        self._default_session = Session(self)
 
     def _coerce_route(self, route) -> RoutePolicy:
         """Coerce to a ``RoutePolicy``; the bare string ``"sharded"``
@@ -198,8 +270,9 @@ class SPCService:
             self.close()
         else:
             # the body already failed: stop without drain so a full
-            # queue or a dead updater can't mask the body's exception
-            self._shutdown()
+            # queue, a dead updater or a stuck join can't mask the
+            # body's exception (a stuck updater is logged, not raised)
+            self._shutdown(strict=False)
         return False
 
     def drain(self, timeout: float | None = None) -> None:
@@ -237,22 +310,44 @@ class SPCService:
             self._shutdown()
         self._check_failure()
 
-    def _shutdown(self) -> None:
+    def _shutdown(self, *, strict: bool = True) -> None:
+        """Stop the updater thread and settle durability.  A join that
+        times out means the thread is STILL APPLYING -- reporting
+        success there would let the caller tear down state the thread
+        is mid-way through mutating, so it is logged and (when
+        ``strict``) raised instead of silently marking the service
+        closed."""
         self._closed = True
         self._stop.set()
-        if self._thread is not None:
-            self._thread.join(timeout=self.wait_timeout)
+        thread = self._thread
+        if thread is not None:
+            thread.join(timeout=self.wait_timeout)
+            if thread.is_alive():
+                msg = (f"updater thread did not stop within "
+                       f"{self.wait_timeout:.1f}s of shutdown; it is "
+                       f"still applying a submitted chunk -- the "
+                       f"service is closed to new work but the thread "
+                       f"may still mutate the index")
+                _log.warning(msg)
+                if strict:
+                    raise TimeoutError(msg)
         self._store.wait()
 
     # -- ingest (write path) -------------------------------------------------
     def submit(self, events: Iterable[Tuple[str, int, int]], *,
-               timeout: float | None = None) -> int:
+               timeout: float | None = None,
+               session: Session | None = None) -> int:
         """Accept a chunk of ('+'|'-', a, b) events for async apply.
 
-        Returns a monotonically increasing *ticket*; once the ticket is
-        applied, :meth:`ticket_version` maps it to the published version
-        covering it, and a ``read_your_writes`` reader created from this
-        service blocks until at least that version serves.
+        Returns a monotonically increasing *ticket* credited to
+        ``session`` (default: the service's default session); once the
+        ticket is applied, :meth:`ticket_version` maps it to the
+        published version covering it, and a ``read_your_writes``
+        reader bound to that session blocks until at least that version
+        serves.  An **empty** chunk returns the ``NO_TICKET`` sentinel
+        (0) -- there is nothing to wait for, and returning a real
+        ticket here would alias someone else's write (an RYW wait keyed
+        on it blocked on foreign ingest).
 
         Op tags and endpoint types are validated here, host-side;
         presence/absence depends on queue order, so it is validated at
@@ -269,8 +364,7 @@ class SPCService:
             raise RuntimeError("service is closed")
         events = self._spc._normalize_events(events)
         if not events:
-            with self._cond:
-                return self._accepted  # nothing to apply or wait for
+            return NO_TICKET  # nothing to apply, nothing to wait for
         # the admission deadline covers the WHOLE wait -- including the
         # admission lock another submitter may hold while parked on a
         # full queue -- so submit(timeout=) really is bounded
@@ -308,6 +402,7 @@ class SPCService:
                 self._accepted = ticket
         finally:
             self._submit_lock.release()
+        (session or self._default_session)._record(ticket)
         return ticket
 
     @property
@@ -333,10 +428,40 @@ class SPCService:
 
     def ticket_version(self, ticket: int) -> int | None:
         """Published version covering ``ticket`` (None until applied,
-        and None again once the ticket ages out of the bounded
-        ``TICKET_HISTORY`` retention window)."""
+        None for the ``NO_TICKET`` sentinel, and None again once the
+        ticket ages out of the bounded ``TICKET_HISTORY`` retention
+        window)."""
         with self._cond:
             return self._ticket_versions.get(int(ticket))
+
+    def session(self) -> Session:
+        """A fresh per-caller write-ticket scope (see :class:`Session`):
+        read-your-writes readers bound to it wait on ITS last submit,
+        not the globally last accepted one."""
+        return Session(self)
+
+    def wait_for_ticket(self, ticket: int,
+                        timeout: float | None = None) -> None:
+        """Block until submit ``ticket`` is applied AND published -- the
+        read-your-writes wait as a standalone primitive (the front door
+        parks coalesced requests on it).  ``NO_TICKET`` (0, the
+        empty-submit sentinel) returns immediately; raises
+        ``UpdaterError`` if the updater died, ``TimeoutError`` past
+        ``timeout`` (default: the service's ``wait_timeout``)."""
+        self._check_failure()
+        ticket = int(ticket)
+        if ticket <= NO_TICKET:
+            return
+        self._wait(lambda: self._applied >= ticket, timeout,
+                   what=f"apply of submit ticket {ticket}")
+
+    def raise_if_failed(self) -> None:
+        """Public failure probe: raises ``UpdaterError`` (original
+        exception chained) if the background updater thread died, else
+        returns.  Layers above the service (the front door's dispatch
+        loop) use it to fail parked work instead of waiting forever on
+        tickets that will never apply."""
+        self._check_failure()
 
     @property
     def version(self) -> int | None:
@@ -423,15 +548,20 @@ class SPCService:
     def reader(self, consistency: str = "pinned", *,
                at_version: int | None = None,
                route: RoutePolicy | str | None = None,
-               timeout: float | None = None):
+               timeout: float | None = None,
+               session: Session | None = None):
         """Build ``serve(s, t) -> (dist int32[B], cnt int64[B])`` with a
         declared consistency level (see the module table).
 
         Every batch pins exactly one published snapshot for its whole
         duration (the PR 4 contract); the consistency level only decides
-        *which* versions are acceptable to pin.  ``route=`` overrides
-        the service's default ``RoutePolicy``; a ``sharded`` policy
-        binds the service's ``serve_mesh`` replicas.  After each call
+        *which* versions are acceptable to pin.  Read-your-writes is
+        tracked by the bound ``session=`` (default: the service's
+        default session, which covers direct ``service.submit`` calls):
+        each batch waits for THAT session's last submit ticket, never
+        the globally last accepted one.  ``route=`` overrides the
+        service's default ``RoutePolicy``; a ``sharded`` policy binds
+        the service's ``serve_mesh`` replicas.  After each call
         ``serve.last_version`` holds the version that batch pinned.
         """
         if consistency not in CONSISTENCY_LEVELS:
@@ -442,6 +572,7 @@ class SPCService:
             raise ValueError(
                 "at_version= is its own consistency mode; combine it "
                 "with the default consistency='pinned' only")
+        sess = self._default_session if session is None else session
         policy = (self._policy if route is None
                   else self._coerce_route(route))
         engine = self._engine_for(policy)
@@ -471,10 +602,10 @@ class SPCService:
                              else self._store.version) >= at_version,
                     timeout, what=f"publish of version {at_version}")
             elif consistency == "read_your_writes":
-                with self._cond:
-                    want = self._accepted  # caller's last accepted ticket
-                self._wait(lambda: self._applied >= want, timeout,
-                           what=f"apply of submit ticket {want}")
+                # the SESSION's last ticket -- waiting on the globally
+                # last accepted one would block on (and be incorrectly
+                # "covered" by) other callers' writes
+                self.wait_for_ticket(sess.last_ticket, timeout)
             snap = self._store.current()   # pinned for the whole batch
             if sharded is not None:
                 # the POLICY's route, not the engine's default -- a
@@ -493,18 +624,35 @@ class SPCService:
         serve.last_version = None
         serve.engine = engine
         serve.policy = policy
+        serve.session = sess
         return serve
 
     def query_batch(self, s, t) -> Tuple:
         """Convenience pinned read through a lazily-built default
-        reader (the façade's one-liner query path)."""
-        if self._default_reader is None:
-            self._default_reader = self.reader()
-        return self._default_reader(s, t)
+        reader (the façade's one-liner query path).  The lazy build is
+        lock-guarded: two concurrent first callers must not each
+        construct a reader -- the loser's reader would be dropped but
+        its round-robin slot (and stats skew) would not."""
+        reader = self._default_reader
+        if reader is None:
+            with self._reader_lock:
+                if self._default_reader is None:
+                    self._default_reader = self.reader()
+                reader = self._default_reader
+        return reader(s, t)
 
     def query_pair(self, s: int, t: int) -> Tuple[int, int]:
         d, c = self.query_batch([s], [t])
         return int(d[0]), int(c[0])
+
+    def frontdoor(self, **knobs) -> "object":
+        """Build a coalescing :class:`repro.serve.frontdoor.FrontDoor`
+        over this service: many concurrent callers' single ``(s, t)``
+        queries batched server-side with admission control and
+        per-request deadlines (see that module).  Knobs pass through to
+        the ``FrontDoor`` constructor."""
+        from repro.serve.frontdoor import FrontDoor
+        return FrontDoor(self, **knobs)
 
     # -- introspection / state ----------------------------------------------
     @property

@@ -302,3 +302,48 @@ def test_stats_dataclass_shape():
     assert dataclasses.asdict(st) == {
         "queries": 8, "batches": 2, "routes": {"merge": 2},
         "versions": {4: 8}}
+
+
+def test_coalesce_pairs_and_split_rows_round_trip():
+    """The front door's assemble/scatter step: heterogeneous per-request
+    pair lists concatenate into one flat batch, and answers split back
+    in request order."""
+    from repro.serve import coalesce_pairs, split_rows
+    parts = [([0], [1]), ([2, 3, 4], [5, 6, 7]), ([8, 9], [10, 11])]
+    s, t, offsets = coalesce_pairs(parts)
+    np.testing.assert_array_equal(s, [0, 2, 3, 4, 8, 9])
+    np.testing.assert_array_equal(t, [1, 5, 6, 7, 10, 11])
+    np.testing.assert_array_equal(offsets, [0, 1, 4, 6])
+    d = np.arange(6, dtype=np.int32)
+    c = np.arange(6, dtype=np.int64) * 10
+    back = split_rows(d, c, offsets)
+    assert len(back) == len(parts)
+    for (ps, _), (di, ci) in zip(parts, back):
+        assert di.shape == ci.shape == (len(ps),)
+    np.testing.assert_array_equal(back[1][0], [1, 2, 3])
+    np.testing.assert_array_equal(back[2][1], [40, 50])
+
+    # ids keep their natural dtype -- the engine's host-side bounds
+    # check must see un-wrapped values (an eager int32 cast would wrap
+    # a huge id into range and silently answer for the wrong vertex)
+    big = np.asarray([2**40], np.int64)
+    s2, t2, _ = coalesce_pairs([(big, [0])])
+    assert s2.dtype == np.int64 and int(s2[0]) == 2**40
+    with pytest.raises(ValueError, match="out of range"):
+        QueryEngine._validate_ids(100, s2, t2)
+
+
+def test_coalesce_pairs_edges_and_errors():
+    from repro.serve import coalesce_pairs, split_rows
+    s, t, offsets = coalesce_pairs([])
+    assert s.shape == t.shape == (0,) and list(offsets) == [0]
+    assert split_rows(np.empty(0, np.int32), np.empty(0, np.int64),
+                      offsets) == []
+    # empty parts are legal and produce empty slices in place
+    _, _, off = coalesce_pairs([([], []), ([1], [2])])
+    np.testing.assert_array_equal(off, [0, 0, 1])
+    with pytest.raises(ValueError, match="part 1"):
+        coalesce_pairs([([0], [1]), ([0, 1], [2])])
+    with pytest.raises(ValueError, match="cover"):
+        split_rows(np.zeros(2, np.int32), np.zeros(3, np.int64),
+                   np.asarray([0, 3]))

@@ -1,0 +1,368 @@
+"""Front-door coalescing + admission control: differential correctness
+of coalesced per-request answers vs the ``bfs_spc`` oracle, per-session
+read-your-writes (waits on YOUR ticket, never a foreign one), typed
+``Overloaded`` / ``DeadlineExceeded`` rejections, deadline-expired
+requests removed from batches before dispatch, and ``UpdaterError``
+propagation to parked callers."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import refimpl as R
+from repro.core.graph import INF
+from repro.data import graph_stream, random_graph_edges
+from repro.serve import (NO_TICKET, DeadlineExceeded, FrontDoor,
+                         FrontDoorError, Overloaded, SPCService,
+                         UpdaterError)
+
+# same scale as the other serve suites: the jit caches stay warm
+N, M, SEED = 30, 70, 11
+
+
+def _service(**kw):
+    kw.setdefault("l_cap", 32)
+    kw.setdefault("update_batch", 4)
+    return SPCService(N, random_graph_edges(N, M, seed=SEED), **kw)
+
+
+def _oracle(svc):
+    g = R.RefGraph(svc.spc.n, sorted(svc.spc._edge_set()))
+    return {s: R.bfs_spc(g, s) for s in range(svc.spc.n)}
+
+
+def _absent_edge(svc, truth=None, min_dist=2):
+    """A currently-absent edge whose endpoints sit >= min_dist apart
+    (inserting it provably changes the answer to dist 1, cnt 1)."""
+    present = svc.spc._edge_set()
+    for a in range(svc.spc.n):
+        for b in range(a + 1, svc.spc.n):
+            if (a, b) in present:
+                continue
+            if truth is None:
+                return a, b
+            d = int(truth[a][0][b])
+            if d >= min_dist:
+                return a, b
+    raise AssertionError("graph saturated")
+
+
+def _gate_updater(svc):
+    """Park the updater thread behind an Event: submits are accepted but
+    never applied until the gate opens (deterministic 'foreign write in
+    flight' state)."""
+    gate = threading.Event()
+    orig = svc.spc.apply_events
+
+    def gated(events, **kw):
+        assert gate.wait(30)
+        return orig(events, **kw)
+
+    svc.spc.apply_events = gated
+    return gate
+
+
+# -- differential: coalesced answers == oracle, per request -----------------
+def test_coalesced_requests_match_oracle():
+    """Many concurrent sessions, heterogeneous request sizes; every
+    per-request scattered answer equals BFS ground truth, in request
+    order."""
+    with _service() as svc:
+        svc.submit(graph_stream(sorted(svc.spc._edge_set()), N, 6, 3,
+                                seed=SEED + 1))
+        svc.drain()
+        truth = _oracle(svc)
+        with svc.frontdoor(max_live_batches=4, dispatchers=2) as door:
+            failures = []
+            pair_counts = []
+
+            def caller(i):
+                rng = np.random.default_rng(100 + i)
+                sess = door.session()
+                try:
+                    for _ in range(8):
+                        k = int(rng.integers(1, 5))
+                        pair_counts.append(k)
+                        s = rng.integers(0, N, k)
+                        t = rng.integers(0, N, k)
+                        d, c = sess.query_batch(s, t)
+                        assert d.shape == c.shape == (k,)
+                        for j in range(k):
+                            dist, cnt = truth[int(s[j])]
+                            if dist[int(t[j])] >= int(INF):
+                                assert int(c[j]) == 0
+                                assert int(d[j]) >= int(INF)
+                            else:
+                                assert int(d[j]) == int(dist[int(t[j])])
+                                assert int(c[j]) == int(cnt[int(t[j])])
+                except BaseException as e:  # surfaced after join
+                    failures.append(e)
+
+            threads = [threading.Thread(target=caller, args=(i,))
+                       for i in range(6)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+            assert not failures, failures
+            stats = door.stats()
+            assert stats["requests"] == 6 * 8
+            assert stats["pairs"] == sum(pair_counts)
+            assert stats["queued"] == 0 and stats["live"] == 0
+            assert stats["batches"] <= stats["requests"]
+
+
+def test_concurrent_callers_coalesce_into_one_batch():
+    """While one dispatch is in flight, arriving requests pile up and
+    ride the NEXT dispatch as one coalesced batch (dispatchers=1 makes
+    it deterministic)."""
+    svc = _service().start()
+    gate = threading.Event()
+    orig_reader = svc.reader
+
+    def gated_reader(*a, **kw):
+        inner = orig_reader(*a, **kw)
+
+        def serve(s, t):
+            assert gate.wait(30)
+            out = inner(s, t)
+            serve.last_version = inner.last_version
+            return out
+
+        serve.last_version = None
+        return serve
+
+    svc.reader = gated_reader
+    door = FrontDoor(svc, max_live_batches=2, dispatchers=1,
+                     max_batch=16).start()
+    results = []
+
+    def caller(i):
+        results.append((i, door.session().query(i % N, (i * 3) % N)))
+
+    first = threading.Thread(target=caller, args=(0,))
+    first.start()
+    _wait_until(lambda: door.stats()["live"] == 1)
+    rest = [threading.Thread(target=caller, args=(i,)) for i in range(1, 6)]
+    for th in rest:
+        th.start()
+    _wait_until(lambda: door.stats()["queued"] == 5)
+    assert door.stats()["batches"] == 1     # only the in-flight one
+    gate.set()
+    first.join()
+    for th in rest:
+        th.join()
+    stats = door.stats()
+    assert stats["batches"] == 2            # 1 in-flight + 1 coalesced
+    assert stats["max_fill"] == 5           # the pile-up rode together
+    assert len(results) == 6
+    door.close()
+    svc.close()
+
+
+def _wait_until(cond, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while not cond():
+        assert time.monotonic() < deadline, "condition never reached"
+        time.sleep(0.005)
+
+
+# -- per-session read-your-writes -------------------------------------------
+def test_session_ryw_sees_own_write_never_pre_write():
+    """After session.submit, the session's next RYW query reflects the
+    write: inserting an absent (a, b) >= 2 hops apart must answer
+    (1, 1), never the pre-write snapshot's answer."""
+    with _service() as svc:
+        with svc.frontdoor() as door:
+            sess = door.session("read_your_writes")
+            for _ in range(4):
+                truth = _oracle(svc)
+                a, b = _absent_edge(svc, truth, min_dist=2)
+                ticket = sess.submit([("+", a, b)])
+                assert ticket > NO_TICKET
+                d, c = sess.query(a, b)
+                assert (d, c) == (1, 1)     # the write, not the past
+                assert svc.applied >= ticket
+                assert svc.ticket_version(ticket) is not None
+
+
+def test_session_ryw_not_gated_by_foreign_writer():
+    """A session with no writes (or older writes) must not wait on a
+    FOREIGN session's in-flight ticket -- the global-ticket bug this PR
+    fixes at the root."""
+    svc = _service().start()
+    gate = _gate_updater(svc)
+    try:
+        with FrontDoor(svc, deadline_s=2.0) as door:
+            foreign = door.session("read_your_writes")
+            mine = door.session("read_your_writes")
+            t = foreign.submit(graph_stream(sorted(svc.spc._edge_set()),
+                                            N, 2, 1, seed=SEED + 2))
+            assert t == 1 and svc.applied == 0   # parked behind the gate
+            t0 = time.monotonic()
+            d, c = mine.query(0, 1)              # no own writes: no wait
+            assert time.monotonic() - t0 < 1.5
+            assert door.stats()["expired"] == 0
+            # the foreign session itself DOES park (and would expire)
+            with pytest.raises(DeadlineExceeded):
+                foreign.query(0, 1, deadline=0.3)
+    finally:
+        gate.set()
+    svc.close()
+
+
+# -- failure edges ----------------------------------------------------------
+def test_deadline_expired_removed_from_batch_before_dispatch():
+    """A request whose deadline lapses while parked is failed and
+    removed before any dispatch; later ready requests still serve."""
+    svc = _service().start()
+    gate = _gate_updater(svc)
+    try:
+        with FrontDoor(svc) as door:
+            rw = door.session("read_your_writes")
+            rw.submit(graph_stream(sorted(svc.spc._edge_set()), N, 2, 1,
+                                   seed=SEED + 3))
+            with pytest.raises(DeadlineExceeded):
+                rw.query(0, 1, deadline=0.2)     # parked ticket expires
+            _wait_until(lambda: door.stats()["expired"] == 1)
+            assert door.stats()["batches"] == 0  # never dispatched
+            pinned = door.session()
+            assert pinned.query(0, 1)            # ready traffic unharmed
+            stats = door.stats()
+            assert stats["batches"] == 1 and stats["pairs"] == 1
+    finally:
+        gate.set()
+    svc.close()
+
+
+def test_admission_rejects_overloaded_with_typed_error():
+    """Queue saturated at max_live_batches * max_batch pairs: the next
+    request is rejected immediately with Overloaded, and the parked
+    ones complete once the gate opens."""
+    svc = _service().start()
+    gate = _gate_updater(svc)
+    door = FrontDoor(svc, max_live_batches=1, max_batch=4,
+                     deadline_s=20.0).start()
+    assert door.max_queued == 4
+    rw = door.session("read_your_writes")
+    rw.submit(graph_stream(sorted(svc.spc._edge_set()), N, 2, 1,
+                           seed=SEED + 4))
+    answers, threads = [], []
+    for i in range(4):
+        th = threading.Thread(
+            target=lambda i=i: answers.append(rw.query(i, (i + 5) % N)))
+        th.start()
+        threads.append(th)
+    _wait_until(lambda: door.stats()["queued"] == 4)
+    t0 = time.monotonic()
+    with pytest.raises(Overloaded, match="bound"):
+        rw.query(0, 1)
+    assert time.monotonic() - t0 < 1.0          # rejected, not queued
+    assert door.stats()["rejected"] == 1
+    gate.set()
+    for th in threads:
+        th.join()
+    assert len(answers) == 4                    # parked work completed
+    door.close()
+    svc.close()
+
+
+def test_updater_death_propagates_to_parked_callers():
+    """A poisoned write kills the updater; a request parked on that
+    session's ticket is failed with UpdaterError (chained), not left to
+    rot until its deadline."""
+    svc = _service().start()
+    with FrontDoor(svc, deadline_s=30.0) as door:
+        sess = door.session("read_your_writes")
+        present = sorted(svc.spc._edge_set())
+        sess.submit([("+",) + present[0]])       # present edge: apply dies
+        with pytest.raises(UpdaterError) as ei:
+            sess.query(0, 1)                     # parked, then failed
+        assert isinstance(ei.value.__cause__, ValueError)
+        # pinned traffic is refused too (service read contract)
+        with pytest.raises(UpdaterError):
+            door.session().query(0, 1)
+    with pytest.raises(UpdaterError):
+        svc.close()     # the failure stays surfaced at teardown too
+
+
+# -- request validation / lifecycle -----------------------------------------
+def test_request_validation_fails_the_caller_not_the_batch():
+    with _service() as svc:
+        with svc.frontdoor(max_batch=8) as door:
+            sess = door.session()
+            with pytest.raises(ValueError, match="out of range"):
+                sess.query(0, N + 7)             # synchronous, pre-queue
+            with pytest.raises(ValueError, match="mismatch"):
+                sess.query_batch([0, 1], [2])
+            with pytest.raises(ValueError, match="max_batch"):
+                sess.query_batch(np.zeros(9, np.int32),
+                                 np.zeros(9, np.int32))
+            with pytest.raises(ValueError, match="consistency"):
+                door.session("linearizable")
+            d, c = sess.query_batch([], [])      # empty: served host-side
+            assert d.shape == (0,) and c.shape == (0,)
+            assert door.stats()["requests"] == 0  # none of those queued
+            assert sess.query(0, 1)              # the door still serves
+
+
+def test_lifecycle_not_started_closed_and_orphan_failure():
+    svc = _service().start()
+    door = FrontDoor(svc)
+    with pytest.raises(RuntimeError, match="not started"):
+        door.session().query(0, 1)
+    gate = _gate_updater(svc)
+    door.start()
+    rw = door.session("read_your_writes")
+    rw.submit(graph_stream(sorted(svc.spc._edge_set()), N, 2, 1,
+                           seed=SEED + 5))
+    errs = []
+
+    def parked():
+        try:
+            rw.query(0, 1)
+        except BaseException as e:
+            errs.append(e)
+
+    th = threading.Thread(target=parked)
+    th.start()
+    _wait_until(lambda: door.stats()["queued"] == 1)
+    door.close()                                 # fails the orphan, typed
+    th.join(timeout=10)
+    assert not th.is_alive()
+    assert len(errs) == 1 and isinstance(errs[0], FrontDoorError)
+    door.close()                                 # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        door.session().query(0, 1)
+    with pytest.raises(RuntimeError, match="closed"):
+        door.start()
+    gate.set()
+    svc.close()
+
+
+def test_from_config_builds_and_owns_the_stack():
+    from repro.configs.dspc import SMOKE
+
+    door = FrontDoor.from_config(SMOKE)
+    assert (door.max_live_batches, door.dispatchers) == (
+        SMOKE.max_live_batches, SMOKE.dispatchers)
+    assert door.max_batch == SMOKE.frontdoor_batch
+    assert door.deadline_s == SMOKE.deadline_s
+    door.service.start()
+    with door:
+        sess = door.session("read_your_writes")
+        sess.submit([])                          # sentinel: gates nothing
+        d, c = sess.query(0, 1)
+        assert isinstance(d, int) and isinstance(c, int)
+    assert door.service._closed                  # owned: closed with door
+
+    # an explicit service is NOT owned
+    with _service() as svc:
+        door2 = FrontDoor.from_config(SMOKE, service=svc,
+                                      max_live_batches=8)
+        assert door2.max_live_batches == 8       # override wins
+        with door2:
+            door2.session().query(0, 1)
+        assert not svc._closed

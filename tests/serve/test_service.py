@@ -18,8 +18,8 @@ from repro.core import refimpl as R
 from repro.core.dynamic import DynamicSPC, UpdateStats
 from repro.core.graph import INF
 from repro.data import graph_stream, random_graph_edges
-from repro.serve import (QueryEngine, RoutePolicy, ServeStats, SPCService,
-                         UpdaterError)
+from repro.serve import (NO_TICKET, QueryEngine, RoutePolicy, ServeStats,
+                         SPCService, UpdaterError)
 
 # same (n, m, seed, l_cap) as tests/serve/test_publish.py so the jit
 # compile caches stay warm across the serve suites
@@ -356,6 +356,135 @@ def test_close_is_idempotent_and_blocks_further_ingest():
     svc.reader()([0], [1])               # reads outlive the lifecycle
 
 
+# -- session scoping / ticket sentinels -------------------------------------
+def test_read_your_writes_is_session_scoped():
+    """THE bug this PR fixes: read-your-writes used to wait on the
+    globally last accepted ticket, so any foreign in-flight write gated
+    every RYW reader.  Now each Session tracks its own last submit
+    ticket, and a session that wrote nothing never waits."""
+    svc = _service().start()
+    gate = threading.Event()
+    orig = svc.spc.apply_events
+
+    def gated(events, **kw):
+        assert gate.wait(30)
+        return orig(events, **kw)
+
+    svc.spc.apply_events = gated
+    try:
+        foreign = svc.session()
+        mine = svc.session()
+        ticket = foreign.submit(_stream(svc, 2, 1, seed=20))
+        assert ticket == 1 and svc.applied == 0   # parked behind the gate
+        # my session wrote nothing: its RYW reader must not wait on the
+        # foreign ticket (pre-fix this timed out)
+        rw_mine = svc.reader("read_your_writes", session=mine, timeout=0.5)
+        d, _ = rw_mine([0], [1])
+        assert d.shape == (1,)
+        # the writing session itself DOES wait -- that is its write
+        rw_foreign = foreign.reader(timeout=0.2)
+        with pytest.raises(TimeoutError, match="ticket"):
+            rw_foreign([0], [1])
+    finally:
+        gate.set()
+    svc.drain()
+    rw_foreign([0], [1])                          # now covered
+    assert rw_foreign.last_version >= svc.ticket_version(ticket) >= 1
+    foreign.wait_applied()
+    assert foreign.last_ticket == ticket
+    svc.close()
+
+
+def test_empty_submit_returns_no_ticket_sentinel():
+    """submit([]) gates nothing: it returns NO_TICKET (0), and an RYW
+    wait keyed on it serves immediately -- pre-fix it returned the
+    global last accepted ticket, blocking the caller on FOREIGN ingest
+    it never performed."""
+    svc = _service()                     # not started: ingest is stalled
+    other = svc.session()
+    other.submit(_stream(svc, 2, 1, seed=21))     # foreign pending write
+    sess = svc.session()
+    assert sess.submit([]) == NO_TICKET == 0
+    assert sess.last_ticket == NO_TICKET
+    assert svc.ticket_version(NO_TICKET) is None
+    # the sentinel never aliases the foreign ticket: this RYW read
+    # serves the seed snapshot instead of timing out on stalled ingest
+    rw = svc.reader("read_your_writes", session=sess, timeout=0.3)
+    d, _ = rw([0], [1])
+    assert rw.last_version == 0
+    svc.start()
+    svc.close()
+
+
+def test_default_reader_built_once_under_race():
+    """Two concurrent FIRST query_batch callers must share one lazily
+    built default reader -- pre-fix both constructed one, leaking a
+    round-robin slot and skewing per-replica stats."""
+    with _service(replicas=2) as svc:
+        builds = []
+        barrier = threading.Barrier(4)
+        orig = svc.reader
+
+        def slow_reader(*a, **kw):
+            builds.append(threading.get_ident())
+            time.sleep(0.05)             # hold the race window open
+            return orig(*a, **kw)
+
+        svc.reader = slow_reader
+        errs = []
+
+        def caller():
+            barrier.wait()
+            try:
+                svc.query_batch([0], [1])
+            except BaseException as e:   # surfaced after join
+                errs.append(e)
+
+        threads = [threading.Thread(target=caller) for _ in range(4)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert not errs, errs
+        assert len(builds) == 1          # exactly one construction
+        assert svc._rr == 1              # exactly one round-robin claim
+
+
+def test_close_detects_stuck_updater_thread():
+    """A join that times out at shutdown means the updater is STILL
+    applying; close() must raise instead of silently marking the
+    service closed over a thread that keeps mutating the index."""
+    svc = _service(wait_timeout=0.3).start()
+    gate = threading.Event()
+    orig = svc.spc.apply_events
+
+    def stuck(events, **kw):
+        assert gate.wait(30)
+        return orig(events, **kw)
+
+    svc.spc.apply_events = stuck
+    svc.submit(_stream(svc, 2, 1, seed=22))
+    with pytest.raises(TimeoutError, match="updater thread"):
+        svc.close(timeout=0.1)
+    assert svc._closed                   # closed to NEW work regardless
+    gate.set()                           # let the thread finish cleanly
+    svc._thread.join(timeout=20)
+    assert not svc._thread.is_alive()
+
+
+def test_route_policy_coerces_mappings():
+    """Configs and front-door knobs carry the route as plain data."""
+    assert RoutePolicy.coerce({"kind": "pallas", "block_b": 64}) == \
+        RoutePolicy.pallas(block_b=64)
+    assert RoutePolicy.coerce({}) == RoutePolicy.auto()
+    sh = RoutePolicy.coerce({"kind": "sharded", "batch_axes": ["x", "y"]})
+    assert sh.batch_axes == ("x", "y") and sh.needs_mesh
+    with pytest.raises(ValueError, match="unknown keys"):
+        RoutePolicy.coerce({"kind": "merge", "blocksize": 9})
+    with pytest.raises(ValueError, match="kernel knobs"):
+        RoutePolicy.coerce({"kind": "merge", "block_b": 64})
+
+
 # -- routing through the service -------------------------------------------
 def test_sharded_policy_reader_matches_routed_path():
     mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
@@ -451,27 +580,36 @@ def test_stats_snapshots_are_frozen_copies():
 
 def test_stats_snapshot_safe_against_concurrent_counting():
     """Iterating a snapshot while another thread inserts new dict keys
-    must never raise (live-dict iteration would)."""
+    must never raise (live-dict iteration would).  The counter is
+    bounded (not stop-flag driven): a tight count loop can starve
+    ``snapshot()``'s lock acquisition indefinitely (lock convoy), so an
+    unbounded counter turned scheduler-dependent snapshot slowness into
+    a test hang."""
     stats = ServeStats()
-    stop = threading.Event()
+    n_counts = 20_000
+    done = threading.Event()
 
     def counter():
-        i = 0
-        while not stop.is_set():
-            stats.count(f"route{i}", 1)  # new key every call: worst case
-            stats.count_version(i, 1)
-            i += 1
+        try:
+            for i in range(n_counts):
+                stats.count(f"route{i}", 1)  # new key every call
+                stats.count_version(i, 1)
+        finally:
+            done.set()
 
     th = threading.Thread(target=counter)
     th.start()
     try:
-        for _ in range(300):
+        while not done.is_set():
             view = stats.snapshot()
             assert sum(view.routes.values()) == view.batches
             list(view.versions.items())
     finally:
-        stop.set()
         th.join()
+    view = stats.snapshot()             # final state is fully consistent
+    assert view.batches == n_counts
+    assert sum(view.routes.values()) == n_counts
+    assert len(view.versions) == n_counts
 
 
 # -- state round trip -------------------------------------------------------
