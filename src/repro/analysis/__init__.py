@@ -1,0 +1,29 @@
+"""Static + runtime concurrency/trace-safety analysis for the repo.
+
+The serve layer (``SPCService`` / ``SnapshotStore`` / ``FrontDoor``) is
+a multi-threaded system with a two-digit lock count, and every
+concurrency bug shipped so far belonged to a small set of mechanically
+detectable patterns (import-time env snapshots, falsy-zero version
+checks, wall-clock deadlines, lock-order inversions).  This package
+turns those bug classes into enforced invariants:
+
+* ``repro.analysis.lockorder`` -- AST lock-order analyzer: extracts
+  every lock/condition acquisition site, resolves intra-module call
+  edges, and checks nested acquisitions against the one declared
+  hierarchy in ``repro.analysis.hierarchy``.
+* ``repro.analysis.rules`` -- trace-safety / serve-hygiene lint rules
+  distilled from the repo's actual bug history (see each rule's doc).
+* ``repro.analysis.shadow`` -- opt-in runtime shadow checker: env-gated
+  instrumented lock wrappers that record per-thread acquisition stacks
+  during the serve test suite and assert the declared hierarchy plus
+  "no lock held across a JAX dispatch" on hot read paths.
+* ``python -m repro.analysis [--baseline ...] [paths ...]`` -- the CI
+  gate: findings as ``file:line rule-id message``, non-zero exit on any
+  unbaselined finding; ``--self-test`` exercises the per-rule fixture
+  snippets.
+"""
+
+from repro.analysis.findings import Finding
+from repro.analysis.hierarchy import HIERARCHY, RANKS, REENTRANT
+
+__all__ = ["Finding", "HIERARCHY", "RANKS", "REENTRANT"]

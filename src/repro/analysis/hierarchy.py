@@ -1,0 +1,84 @@
+"""The one canonical lock hierarchy of the serve layer.
+
+Every lock/condition in ``src/repro/serve/`` (plus the stats locks the
+serve layer reaches into ``core``/``engine`` for) is created through the
+``repro.analysis.shadow`` factories with one of the canonical names
+below, and both checkers consume this table:
+
+* the static lock-order analyzer (``repro.analysis.lockorder``) maps
+  every acquisition site to its canonical name and requires nested
+  acquisitions to move strictly *down* the table;
+* the runtime shadow checker (``repro.analysis.shadow``) enforces the
+  same order on real per-thread acquisition stacks while the serve test
+  suite runs.
+
+Why this order (outermost first):
+
+1. ``frontdoor.cond`` -- the door's dispatcher/admission condition.
+   Dispatchers probe service state (``raise_if_failed``, the
+   ``applied`` ticket watermark) while claiming a batch, so the door
+   sits strictly above every service lock.
+2. ``service.submit_lock`` -- the ingest admission lock; the submit
+   path publishes the accepted ticket under ``service.cond`` while
+   still holding admission (ticket order == queue order).
+3. ``service.reader_lock`` -- replica round-robin, the dedicated-engine
+   cache and the lazy default-reader build; the lazy build re-enters
+   through ``reader() -> _engine_for()`` (reentrant RLock).
+4. ``service.cond`` -- accepted/applied tickets, the failure slot and
+   the ticket->version map; the innermost *service* lock so any
+   public probe (``applied``, ``pending``, ``raise_if_failed``) can be
+   called under the locks above it.
+5. ``session.lock`` -- one session's last-submitted ticket.
+6. ``store.lock`` -- the snapshot store's front-pointer swap.
+7. ``update_stats.lock`` / ``serve_stats.lock`` -- leaf counter locks;
+   never held across any other acquisition (or a JAX dispatch).
+
+A nested acquisition that moves *up* this table, or of a lock not in
+it, is a finding -- the "lock-convoyed ``snapshot()`` hang" class from
+CHANGES.md PR 6.
+"""
+
+from __future__ import annotations
+
+#: (canonical name, owner + what it guards), outermost first.
+HIERARCHY = (
+    ("frontdoor.cond",
+     "FrontDoor._cond: pending-request queue, admission counters, "
+     "dispatcher wakeups"),
+    ("service.submit_lock",
+     "SPCService._submit_lock: ingest admission; ticket order == "
+     "queue order"),
+    ("service.reader_lock",
+     "SPCService._reader_lock: replica round-robin + dedicated-engine "
+     "cache + lazy default-reader build (reentrant)"),
+    ("service.cond",
+     "SPCService._cond: accepted/applied tickets, updater failure, "
+     "ticket->version map"),
+    ("session.lock",
+     "Session._lock: per-session last submit ticket"),
+    ("store.lock",
+     "SnapshotStore._lock: front snapshot pointer + publish count"),
+    ("update_stats.lock",
+     "core.dynamic.UpdateStats._lock: updater counters (leaf)"),
+    ("serve_stats.lock",
+     "serve.engine.ServeStats._lock: per-engine serve counters (leaf)"),
+)
+
+#: canonical name -> rank; nested acquisitions must strictly increase.
+RANKS = {name: rank for rank, (name, _) in enumerate(HIERARCHY)}
+
+#: Locks a thread may legally re-acquire while holding them
+#: (``threading.RLock``, and ``threading.Condition`` whose default
+#: backing lock is an RLock).
+REENTRANT = frozenset({
+    "frontdoor.cond",
+    "service.reader_lock",
+    "service.cond",
+})
+
+
+def describe(name: str) -> str:
+    for n, what in HIERARCHY:
+        if n == name:
+            return what
+    return "<undeclared>"

@@ -1,0 +1,241 @@
+"""Runtime shadow checker: instrumented locks enforcing the hierarchy.
+
+The serve layer creates every lock through the factories below, passing
+the lock's canonical name from ``repro.analysis.hierarchy``:
+
+    self._lock = make_lock("store.lock")
+    self._cond = make_condition("service.cond")
+
+With ``REPRO_SHADOW_LOCKS`` unset (the default) the factories return
+plain ``threading`` primitives -- zero overhead, zero behaviour change.
+With ``REPRO_SHADOW_LOCKS=1`` (the serve test suite sets it in an
+autouse fixture) they return thin wrappers that keep a per-thread stack
+of held locks and raise ``LockHierarchyViolation`` on:
+
+* an acquisition whose rank does not strictly exceed every rank already
+  held by this thread (lock-order inversion -- the CHANGES.md PR 6
+  "lock-convoyed ``snapshot()`` hang" class), unless it is a legal
+  re-entry of a reentrant lock;
+* re-entry of a non-reentrant lock (certain self-deadlock);
+* ``assert_no_locks_held()`` on a hot read path while any shadow lock
+  is held (a JAX dispatch under a lock turns device latency into lock
+  hold time for every other thread).
+
+The env var is read **at each factory call**, not at import -- the PR 3
+INTERPRET bug class -- so tests can flip it with ``monkeypatch.setenv``
+without reimporting the serve modules.
+
+``locks_required("name", ...)`` marks functions whose contract is
+"caller already holds these locks".  It is enforced here at runtime
+when shadowing is on, and doubles as the held-set seed for the static
+analyzer in ``repro.analysis.lockorder``.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import threading
+from typing import List, Tuple
+
+from repro.analysis import hierarchy
+
+ENV_FLAG = "REPRO_SHADOW_LOCKS"
+
+_tls = threading.local()
+
+
+class LockHierarchyViolation(AssertionError):
+    """A runtime acquisition violated the declared lock hierarchy."""
+
+
+def shadow_enabled() -> bool:
+    """Read the gate env var now (never snapshotted at import)."""
+    return os.environ.get(ENV_FLAG, "").strip().lower() in (
+        "1", "true", "on", "yes")
+
+
+def _held_stack() -> List[Tuple[str, int]]:
+    """This thread's stack of (canonical name, rank) currently held."""
+    stack = getattr(_tls, "stack", None)
+    if stack is None:
+        stack = _tls.stack = []
+    return stack
+
+
+def held_locks() -> Tuple[str, ...]:
+    """Canonical names of shadow locks held by the calling thread."""
+    return tuple(name for name, _ in _held_stack())
+
+
+def _check_acquire(name: str, rank: int, reentrant: bool,
+                   bounded: bool = False) -> None:
+    stack = _held_stack()
+    if any(held == name for held, _ in stack):
+        if reentrant or bounded:
+            # a *bounded* re-acquisition (non-blocking or timed) is a
+            # try-lock probe: it times out instead of deadlocking
+            return
+        raise LockHierarchyViolation(
+            f"re-entry of non-reentrant lock '{name}' "
+            f"(held: {[n for n, _ in stack]}): self-deadlock")
+    for held, held_rank in stack:
+        if held_rank >= rank:
+            raise LockHierarchyViolation(
+                f"acquiring '{name}' (rank {rank}) while holding "
+                f"'{held}' (rank {held_rank}) inverts the declared "
+                f"hierarchy (repro/analysis/hierarchy.py); "
+                f"held: {[n for n, _ in stack]}")
+
+
+class _ShadowBase:
+    """Hierarchy bookkeeping shared by all shadow wrappers."""
+
+    def __init__(self, name: str, inner, reentrant: bool) -> None:
+        if name not in hierarchy.RANKS:
+            raise LockHierarchyViolation(
+                f"lock name '{name}' is not declared in "
+                f"repro/analysis/hierarchy.py")
+        self._name = name
+        self._rank = hierarchy.RANKS[name]
+        self._reentrant = reentrant
+        self._inner = inner
+
+    def _push(self) -> None:
+        _held_stack().append((self._name, self._rank))
+
+    def _pop(self) -> None:
+        stack = _held_stack()
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i][0] == self._name:
+                del stack[i]
+                return
+
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        bounded = (not blocking) or timeout >= 0
+        _check_acquire(self._name, self._rank, self._reentrant,
+                       bounded=bounded)
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._push()
+        return got
+
+    def release(self) -> None:
+        self._inner.release()
+        self._pop()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<shadow {self._name} rank={self._rank}>"
+
+
+class _ShadowCondition(_ShadowBase):
+    """Shadow ``threading.Condition``: wait/notify require the lock held
+    (checked here so violations surface as hierarchy errors, not the
+    stdlib's RuntimeError deep in a dispatcher thread)."""
+
+    def _require_held(self, op: str) -> None:
+        if not any(n == self._name for n, _ in _held_stack()):
+            raise LockHierarchyViolation(
+                f"'{self._name}.{op}()' called without holding the "
+                f"condition")
+
+    def wait(self, timeout=None):
+        self._require_held("wait")
+        # the condition releases the lock while waiting; mirror that in
+        # the shadow stack so other checks in this thread stay accurate
+        self._pop()
+        try:
+            return self._inner.wait(timeout)
+        finally:
+            self._push()
+
+    def wait_for(self, predicate, timeout=None):
+        self._require_held("wait_for")
+        self._pop()
+        try:
+            return self._inner.wait_for(predicate, timeout)
+        finally:
+            self._push()
+
+    def notify(self, n: int = 1) -> None:
+        self._require_held("notify")
+        self._inner.notify(n)
+
+    def notify_all(self) -> None:
+        self._require_held("notify_all")
+        self._inner.notify_all()
+
+    def locked(self) -> bool:  # Condition has no .locked()
+        raise AttributeError("Condition has no locked()")
+
+
+def make_lock(name: str):
+    """A ``threading.Lock`` (shadow-wrapped when the env gate is on)."""
+    if shadow_enabled():
+        return _ShadowBase(name, threading.Lock(), reentrant=False)
+    return threading.Lock()
+
+
+def make_rlock(name: str):
+    """A ``threading.RLock`` (shadow-wrapped when the env gate is on)."""
+    if shadow_enabled():
+        return _ShadowBase(name, threading.RLock(), reentrant=True)
+    return threading.RLock()
+
+
+def make_condition(name: str):
+    """A ``threading.Condition`` (shadow-wrapped when the gate is on).
+
+    The default backing lock is an RLock, so re-entry is legal."""
+    if shadow_enabled():
+        return _ShadowCondition(name, threading.Condition(),
+                                reentrant=True)
+    return threading.Condition()
+
+
+def assert_no_locks_held(where: str) -> None:
+    """Hot-path guard: no shadow lock may be held across a JAX dispatch.
+
+    No-op unless shadowing is on.  Call it at the top of device-touching
+    read paths (``QueryEngine.query_batch``, snapshot publish) so a lock
+    accidentally held across a dispatch fails the shadowed test suite
+    instead of silently convoying production readers."""
+    if not shadow_enabled():
+        return
+    held = held_locks()
+    if held:
+        raise LockHierarchyViolation(
+            f"{where}: JAX dispatch entered while holding {list(held)}; "
+            f"device latency under a lock convoys every other thread")
+
+
+def locks_required(*names: str):
+    """Declare "caller must already hold these locks".
+
+    Enforced at runtime when shadowing is on; also read statically by
+    ``repro.analysis.lockorder`` as the held-set seed for the decorated
+    function."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            if shadow_enabled():
+                held = set(held_locks())
+                missing = [n for n in names if n not in held]
+                if missing:
+                    raise LockHierarchyViolation(
+                        f"{fn.__qualname__} requires {missing} held "
+                        f"(held: {sorted(held)})")
+            return fn(*args, **kwargs)
+        wrapper.__locks_required__ = tuple(names)
+        return wrapper
+    return deco

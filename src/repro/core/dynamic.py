@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.shadow import make_lock
 from repro.core import graph as G
 from repro.core import labels as L
 from repro.core.construct import build_index
@@ -89,7 +90,7 @@ class UpdateStats:
         # one updater thread writes, but serving/monitoring threads read
         # while it counts (the service façade's stats endpoint); all
         # increments and snapshots go through this lock
-        self._lock = threading.Lock()
+        self._lock = make_lock("update_stats.lock")
 
     def bump(self, **deltas: int) -> None:
         """Lock-guarded counter increments (the only write path)."""

@@ -40,7 +40,6 @@ def _kernel(ids_ref, table_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def embedding_bag_pallas(ids, table, *, interpret: bool | None = None):
     """out[b] = sum over s of table[ids[b, s]].
 
@@ -50,8 +49,18 @@ def embedding_bag_pallas(ids, table, *, interpret: bool | None = None):
       table: float[V + 1, D] with table[V] == 0.
     Returns:
       float[B, D].
+
+    ``interpret`` resolves through ``resolve_interpret`` HERE,
+    outside the jit boundary: flipping REPRO_PALLAS_INTERPRET takes
+    effect on the next call instead of being baked into the first
+    call's cached trace.
     """
-    interpret = resolve_interpret(interpret)
+    return _embedding_bag_jit(ids, table,
+                              interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _embedding_bag_jit(ids, table, *, interpret: bool):
     b, s = ids.shape
     v1, d = table.shape
     ids = jnp.minimum(ids.astype(jnp.int32), v1 - 1)

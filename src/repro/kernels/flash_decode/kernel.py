@@ -63,8 +63,6 @@ def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_bh", "block_s",
-                                             "interpret"))
 def flash_decode_pallas(q, k, v, lengths, *, block_bh: int = 8,
                         block_s: int = 512, interpret: bool | None = None):
     """Single-token attention over a KV cache.
@@ -76,8 +74,21 @@ def flash_decode_pallas(q, k, v, lengths, *, block_bh: int = 8,
       lengths: int32[BH] valid cache length per row.
     Returns:
       float[BH, D] attention outputs.
+
+    ``interpret`` resolves through ``resolve_interpret`` HERE,
+    outside the jit boundary: flipping REPRO_PALLAS_INTERPRET takes
+    effect on the next call instead of being baked into the first
+    call's cached trace.
     """
-    interpret = resolve_interpret(interpret)
+    return _flash_decode_jit(q, k, v, lengths, block_bh=block_bh,
+                             block_s=block_s,
+                             interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_bh", "block_s",
+                                             "interpret"))
+def _flash_decode_jit(q, k, v, lengths, *, block_bh: int,
+                      block_s: int, interpret: bool):
     bh, d = q.shape
     s_len = k.shape[1]
     scale = 1.0 / (d ** 0.5)

@@ -54,9 +54,6 @@ def _kernel(dst_ref, val_ref, out_ref, acc_ref, *, block_n: int):
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("num_segments", "block_e", "block_n",
-                                    "interpret"))
 def segment_matmul_pallas(vals, dst, num_segments: int, *,
                           block_e: int = 512, block_n: int = 128,
                           interpret: bool | None = None):
@@ -68,8 +65,22 @@ def segment_matmul_pallas(vals, dst, num_segments: int, *,
         dropped (use as padding sentinel).
     Returns:
       float[num_segments, D].
+
+    ``interpret`` resolves through ``resolve_interpret`` HERE,
+    outside the jit boundary: flipping REPRO_PALLAS_INTERPRET takes
+    effect on the next call instead of being baked into the first
+    call's cached trace.
     """
-    interpret = resolve_interpret(interpret)
+    return _segment_matmul_jit(vals, dst, num_segments,
+                               block_e=block_e, block_n=block_n,
+                               interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_segments", "block_e", "block_n",
+                                    "interpret"))
+def _segment_matmul_jit(vals, dst, num_segments: int, *,
+                        block_e: int, block_n: int, interpret: bool):
     e, d = vals.shape
     ep = ceil_div(e, block_e) * block_e
     np_ = ceil_div(num_segments, block_n) * block_n

@@ -48,7 +48,6 @@ def _kernel(hub_s, dist_s, cnt_s, hub_t, dist_t, cnt_t, d_out, c_out):
     c_out[...] = jnp.where(connected, c, 0.0).astype(jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def spc_query_pallas(hub_s, dist_s, cnt_s, hub_t, dist_t, cnt_t,
                      *, block_b: int = 128, interpret: bool | None = None):
     """Batched pair query.
@@ -60,8 +59,20 @@ def spc_query_pallas(hub_s, dist_s, cnt_s, hub_t, dist_t, cnt_t,
       cnt_s, cnt_t: float32[B, L] hub counts (pad 0).
     Returns:
       (dist int32[B], count float32[B]); disconnected pairs -> (INF, 0).
+
+    ``interpret`` resolves through ``resolve_interpret`` HERE,
+    outside the jit boundary: flipping REPRO_PALLAS_INTERPRET takes
+    effect on the next call instead of being baked into the first
+    call's cached trace.
     """
-    interpret = resolve_interpret(interpret)
+    return _spc_query_jit(hub_s, dist_s, cnt_s, hub_t, dist_t, cnt_t,
+                          block_b=block_b,
+                          interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def _spc_query_jit(hub_s, dist_s, cnt_s, hub_t, dist_t, cnt_t,
+                   *, block_b: int, interpret: bool):
     b, l = hub_s.shape
     bp = ceil_div(b, block_b) * block_b
     args = [pad_to(x, block_b, 0, value=pad) for x, pad in (

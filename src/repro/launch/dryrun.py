@@ -1,7 +1,8 @@
 import os
 os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
+    # the ONE legal import-time env read: must run before jax init
+    + os.environ.get("XLA_FLAGS", ""))  # analysis: ignore[env-import-snapshot]
 
 """Multi-pod dry-run: ``lower().compile()`` every (arch x shape) cell on
 the production meshes and extract the roofline terms.
@@ -112,14 +113,14 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool,
     rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "chips": chips,
            "model_flops": bundle.model_flops, "notes": bundle.notes,
            "status": "error"}
-    t0 = time.time()
+    t0 = time.monotonic()
     try:
         with mesh:
             lowered = jax.jit(fn, in_shardings=in_sh).lower(
                 *bundle.abstract_args)
-            t1 = time.time()
+            t1 = time.monotonic()
             compiled = lowered.compile()
-            t2 = time.time()
+            t2 = time.monotonic()
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
             hlo_text = compiled.as_text()

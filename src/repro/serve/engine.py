@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.shadow import assert_no_locks_held, make_lock
 from repro.core import query as Q
 from repro.core.labels import SPCIndex
 from repro.kernels.spc_query.ops import exact_query_batch
@@ -163,7 +164,7 @@ class ServeStats:
         # one engine may front many replica threads (the publish
         # module's reader contract); counters must not lose increments
         # to interleaved read-modify-writes
-        self._lock = threading.Lock()
+        self._lock = make_lock("serve_stats.lock")
 
     def count(self, route: str, queries: int) -> None:
         with self._lock:
@@ -263,6 +264,7 @@ class QueryEngine:
             raise ValueError(f"unknown route {route!r}; want one of "
                              f"{self.ROUTES}")
         self._validate_ids(idx.n, s, t)
+        assert_no_locks_held("QueryEngine.query_batch")
         b = s.shape[0]
         if b == 0:
             # empty batch: answer host-side -- padding B=0 up to the
@@ -338,6 +340,7 @@ class QueryEngine:
                     f"serving path (only the sorted-merge core is "
                     f"sharded); use route='auto' or 'merge'")
             self._validate_ids(idx.n, s, t)
+            assert_no_locks_held("QueryEngine.sharded.serve")
             b = s.shape[0]
             if b == 0:  # see query_batch: no dispatch, no phantom batch
                 return _EMPTY_DIST, _EMPTY_CNT

@@ -58,6 +58,7 @@ from typing import Tuple
 
 import numpy as np
 
+from repro.analysis.shadow import locks_required, make_condition
 from repro.serve.engine import (DEFAULT_BUCKETS, QueryEngine,
                                 coalesce_pairs, split_rows)
 from repro.serve.service import NO_TICKET, SPCService, UpdaterError
@@ -224,7 +225,7 @@ class FrontDoor:
         self.deadline_s = float(deadline_s)
         self.gather_window_s = float(gather_window_s)
         self._route = route
-        self._cond = threading.Condition()
+        self._cond = make_condition("frontdoor.cond")
         self._pending: deque = deque()    # admitted, unclaimed requests
         self._queued = 0                  # pairs in _pending
         self._live = 0                    # batches currently dispatching
@@ -246,9 +247,9 @@ class FrontDoor:
         service keeps its own lifecycle -- start it too (or use
         ``service.start().frontdoor()``) or read-your-writes requests
         will park until their deadline."""
-        if self._closed:
-            raise RuntimeError("front door is closed")
         with self._cond:
+            if self._closed:
+                raise RuntimeError("front door is closed")
             if not self._threads:
                 self._threads = [
                     threading.Thread(target=self._dispatch_loop,
@@ -275,18 +276,20 @@ class FrontDoor:
             orphans = list(self._pending)
             self._pending.clear()
             self._queued = 0
+            threads = list(self._threads)
             self._cond.notify_all()
         err = FrontDoorError(
             "front door closed before the request was served")
         for req in orphans:
             req.fail(err)
-        for th in self._threads:
+        for th in threads:
             th.join(timeout=10.0)
         if self._owns_service:
             self.service.close()
 
     def _running(self) -> bool:
-        return bool(self._threads) and not self._stop
+        with self._cond:
+            return bool(self._threads) and not self._stop
 
     # -- caller side ---------------------------------------------------------
     def session(self, consistency: str = "pinned") -> FrontDoorSession:
@@ -341,6 +344,7 @@ class FrontDoor:
         return req.dist, req.cnt
 
     # -- dispatcher side -----------------------------------------------------
+    @locks_required("frontdoor.cond")
     def _take_ready(self, now: float, cap: int) -> list:
         """Claim up to ``cap`` pairs of ready requests, FIFO.  Holds
         ``_cond``.  Expired requests are failed HERE -- removed from

@@ -59,6 +59,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.shadow import assert_no_locks_held, make_lock
 from repro.core.labels import SPCIndex
 from repro.train import checkpoint as C
 
@@ -112,7 +113,7 @@ class SnapshotStore:
     def __init__(self, index: SPCIndex | None = None, *, version: int = 0,
                  mesh=None, checkpoint_dir: str | None = None,
                  async_checkpoint: bool = False, keep: int = 3) -> None:
-        self._lock = threading.Lock()
+        self._lock = make_lock("store.lock")
         self._mesh = mesh
         self._ckpt_dir = checkpoint_dir
         self._saver = C.AsyncSaver() if async_checkpoint else None
@@ -128,13 +129,14 @@ class SnapshotStore:
     @property
     def version(self) -> int | None:
         """Version of the front snapshot (None while empty)."""
-        snap = self._front
+        snap = self._front  # analysis: ignore[unlocked-attr]
         return None if snap is None else snap.version
 
     def current(self) -> Snapshot:
         """Pin the front snapshot: the returned object is immutable and
         survives any concurrent publish unchanged."""
-        snap = self._front  # single reference read: atomic under the GIL
+        # single reference read: atomic under the GIL (lock-free pin)
+        snap = self._front  # analysis: ignore[unlocked-attr]
         if snap is None:
             raise RuntimeError("SnapshotStore holds no published snapshot")
         return snap
@@ -144,6 +146,7 @@ class SnapshotStore:
         """Write the back buffer: place the new snapshot where replicas
         will read it.  Runs outside the lock -- readers stay on the
         front snapshot for however long this takes."""
+        assert_no_locks_held("SnapshotStore._stage")
         if self._mesh is not None:
             from repro.core.distributed import replicate_index
             index = replicate_index(self._mesh, index)

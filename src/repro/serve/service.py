@@ -77,6 +77,8 @@ import threading
 import time
 from typing import Iterable, Sequence, Tuple
 
+from repro.analysis.shadow import (make_condition, make_lock,
+                                   make_rlock)
 from repro.core.dynamic import DEFAULT_BATCH, DynamicSPC
 from repro.serve.engine import DEFAULT_BUCKETS, QueryEngine
 from repro.serve.publish import SnapshotStore
@@ -115,7 +117,7 @@ class Session:
 
     def __init__(self, service: "SPCService") -> None:
         self._service = service
-        self._lock = threading.Lock()
+        self._lock = make_lock("session.lock")
         self._last = NO_TICKET
 
     @property
@@ -223,14 +225,14 @@ class SPCService:
         # guards _rr + _dedicated + the lazy _default_reader build; an
         # RLock because building the default reader re-enters through
         # reader() -> _engine_for()
-        self._reader_lock = threading.RLock()
+        self._reader_lock = make_rlock("service.reader_lock")
         self._dedicated: dict = {}        # (block_b, interpret) -> engine
         self.update_batch = update_batch
         self.wait_timeout = float(wait_timeout)
         # -- ingest machinery -------------------------------------------
         self._queue: queue_lib.Queue = queue_lib.Queue(maxsize=queue_size)
-        self._submit_lock = threading.Lock()   # ticket order == queue order
-        self._cond = threading.Condition()     # guards the fields below
+        self._submit_lock = make_lock("service.submit_lock")
+        self._cond = make_condition("service.cond")  # guards the below
         self._accepted = 0                     # last ticket handed out
         self._applied = 0                      # last ticket fully published
         self._ticket_versions: dict = {}       # ticket -> covering version
@@ -296,7 +298,7 @@ class SPCService:
         if self._closed:
             self._check_failure()
             return
-        if self._failure is None and self._thread is None and self.pending:
+        if not self._failed() and self._thread is None and self.pending:
             # accepted submits on a never-started service would be
             # silently discarded; refuse (service stays open) so the
             # caller can start() and close again -- drain()'s contract
@@ -304,7 +306,7 @@ class SPCService:
                 "service not started with submits pending: call "
                 "start() before close() so they apply")
         try:
-            if self._thread is not None and self._failure is None:
+            if self._thread is not None and not self._failed():
                 self.drain(timeout)
         finally:
             self._shutdown()
@@ -377,7 +379,8 @@ class SPCService:
             raise queue_lib.Full(
                 "ingest admission lock held past the submit timeout")
         try:
-            ticket = self._accepted + 1
+            with self._cond:
+                ticket = self._accepted + 1
             # failure-aware blocking put: a submitter parked on a full
             # queue must wake and raise if the updater dies mid-wait
             # (the queue would otherwise never drain again)
@@ -500,8 +503,13 @@ class SPCService:
     def _running(self) -> bool:
         return self._thread is not None and self._thread.is_alive()
 
+    def _failed(self) -> bool:
+        with self._cond:
+            return self._failure is not None
+
     def _check_failure(self) -> None:
-        f = self._failure
+        with self._cond:
+            f = self._failure
         if f is not None:
             raise UpdaterError(
                 f"updater thread died on a submitted chunk: {f!r}; "
@@ -633,7 +641,9 @@ class SPCService:
         lock-guarded: two concurrent first callers must not each
         construct a reader -- the loser's reader would be dropped but
         its round-robin slot (and stats skew) would not."""
-        reader = self._default_reader
+        # intentional lock-free fast path: double-checked lazy build,
+        # GIL-atomic reference read (re-checked under the lock below)
+        reader = self._default_reader  # analysis: ignore[unlocked-attr]
         if reader is None:
             with self._reader_lock:
                 if self._default_reader is None:

@@ -1,0 +1,11 @@
+"""Bad: a drain loop whose broad except drops the exception -- an
+``UpdaterError`` (or the failure that should become one) vanishes and
+the service serves stale data forever."""
+
+
+def drain(queue_items, apply):
+    for item in queue_items:
+        try:
+            apply(item)
+        except Exception:  # swallowed: no re-raise, exception unused
+            pass

@@ -1,0 +1,19 @@
+"""Good: broad catches either route the bound exception somewhere
+(the service failure slot) or re-raise; truly expected errors are
+caught narrowly."""
+
+
+def drain(queue_items, apply, fail):
+    for item in queue_items:
+        try:
+            apply(item)
+        except Exception as exc:
+            fail(exc)  # routed into the failure slot, not dropped
+            return
+
+
+def parse_int(raw):
+    try:
+        return int(raw)
+    except ValueError:  # narrow: cannot swallow UpdaterError
+        return None

@@ -1,0 +1,15 @@
+"""Bad: ``Condition.wait`` / ``notify`` without holding the condition.
+The stdlib raises RuntimeError at runtime; worse, a wait that *would*
+have been legal under the lock can miss its wakeup entirely."""
+from repro.analysis.shadow import make_condition
+
+
+class Waiter:
+    def __init__(self):
+        self._cond = make_condition("service.cond")
+
+    def wait_done(self, timeout):
+        self._cond.wait(timeout)  # not holding the condition
+
+    def wake(self):
+        self._cond.notify_all()  # not holding the condition

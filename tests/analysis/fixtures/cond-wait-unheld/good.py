@@ -1,0 +1,17 @@
+"""Good: wait/notify under ``with cond`` -- the only legal shape."""
+from repro.analysis.shadow import make_condition
+
+
+class Waiter:
+    def __init__(self):
+        self._cond = make_condition("service.cond")
+        self._done = False
+
+    def wait_done(self, timeout):
+        with self._cond:
+            self._cond.wait(timeout)
+
+    def wake(self):
+        with self._cond:
+            self._done = True
+            self._cond.notify_all()

@@ -1,0 +1,10 @@
+"""Bad: the CHANGES.md PR 3 class verbatim -- the interpret-mode env
+var snapshotted at import.  Flipping REPRO_PALLAS_INTERPRET after the
+first import of this module is silently ignored."""
+import os
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def kernel_entry(x):
+    return x if INTERPRET else -x

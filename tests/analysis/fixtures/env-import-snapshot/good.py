@@ -1,0 +1,13 @@
+"""Good: the env var is read inside the function that needs it, at
+call time (the ``kernels/common.resolve_interpret`` shape)."""
+import os
+
+
+def resolve_interpret(flag=None):
+    if flag is not None:
+        return bool(flag)
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def kernel_entry(x):
+    return x if resolve_interpret() else -x

@@ -1,0 +1,14 @@
+"""Bad: the PR 3 class one level up -- env resolution *inside* the
+jitted entry.  It runs once at trace time; later env flips hit the
+cache and are silently ignored."""
+import functools
+import os
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kernel_entry(x, *, interpret=None):
+    if interpret is None:
+        interpret = os.environ.get("REPRO_PALLAS_INTERPRET") == "1"
+    return x * (2.0 if interpret else 1.0)

@@ -1,0 +1,16 @@
+"""Good: the thin-wrapper shape the kernels use -- resolve outside the
+jit boundary, pass the resolved static value in."""
+import functools
+
+import jax
+
+from repro.kernels.common import resolve_interpret
+
+
+def kernel_entry(x, *, interpret=None):
+    return _kernel_jit(x, interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _kernel_jit(x, *, interpret):
+    return x * (2.0 if interpret else 1.0)

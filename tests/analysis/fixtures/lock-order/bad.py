@@ -1,0 +1,17 @@
+"""Bad: the CHANGES.md PR 6 class -- a publish path that takes the
+store's front-pointer lock and then reaches *up* into the front door's
+condition.  A dispatcher holding the condition while probing the store
+deadlocks against it (in practice: the lock-convoyed ``snapshot()``
+hang)."""
+from repro.analysis.shadow import make_condition, make_lock
+
+
+class Publisher:
+    def __init__(self):
+        self._lock = make_lock("store.lock")
+        self._cond = make_condition("frontdoor.cond")
+
+    def publish(self):
+        with self._lock:
+            with self._cond:  # rank 5 -> rank 0: inversion
+                self._cond.notify_all()

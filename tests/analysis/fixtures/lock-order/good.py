@@ -1,0 +1,14 @@
+"""Good: same two locks, acquired strictly down the hierarchy
+(frontdoor.cond rank 0, then store.lock rank 5)."""
+from repro.analysis.shadow import make_condition, make_lock
+
+
+class Dispatcher:
+    def __init__(self):
+        self._cond = make_condition("frontdoor.cond")
+        self._lock = make_lock("store.lock")
+
+    def dispatch(self):
+        with self._cond:
+            with self._lock:
+                self._cond.notify_all()

@@ -1,0 +1,18 @@
+"""Bad: a plain (non-reentrant) lock re-acquired through a call edge
+the analyzer resolves: ``bump -> _read`` while the lock is held.  At
+runtime this self-deadlocks on the second acquire."""
+from repro.analysis.shadow import make_lock
+
+
+class Counter:
+    def __init__(self):
+        self._lock = make_lock("serve_stats.lock")
+        self._total = 0
+
+    def bump(self):
+        with self._lock:
+            self._total = self._read() + 1
+
+    def _read(self):
+        with self._lock:  # second acquire on the same thread
+            return self._total

@@ -1,0 +1,18 @@
+"""Good: the same shape on an RLock created by ``make_rlock`` --
+re-entry through ``get -> _build`` is the declared, legal pattern
+(the serve layer's lazy default-reader build)."""
+from repro.analysis.shadow import make_rlock
+
+
+class Cache:
+    def __init__(self):
+        self._lock = make_rlock("service.reader_lock")
+        self._entries = {}
+
+    def lookup(self, key):
+        with self._lock:
+            return self._build(key)
+
+    def _build(self, key):
+        with self._lock:  # legal RLock re-entry
+            return self._entries.setdefault(key, key)

@@ -1,0 +1,18 @@
+"""Bad: an anonymous ``threading.Lock`` participating in a nested
+acquisition.  Undeclared locks have no rank, so the analyzer (and the
+shadow checker) cannot order them -- every new serve-layer lock must be
+created through the shadow factories and ranked in hierarchy.py."""
+import threading
+
+from repro.analysis.shadow import make_lock
+
+
+class Store:
+    def __init__(self):
+        self._outer = make_lock("store.lock")
+        self._scratch = threading.Lock()  # anonymous
+
+    def swap(self):
+        with self._outer:
+            with self._scratch:  # nested + undeclared
+                pass

@@ -1,0 +1,17 @@
+"""Good: the anonymous lock exists but is only ever held alone --
+a leaf that never participates in nesting needs no rank."""
+import threading
+
+from repro.analysis.shadow import make_lock
+
+
+class Store:
+    def __init__(self):
+        self._outer = make_lock("store.lock")
+        self._scratch = threading.Lock()
+
+    def swap(self):
+        with self._outer:
+            pass
+        with self._scratch:
+            pass

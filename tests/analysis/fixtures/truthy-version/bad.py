@@ -1,0 +1,12 @@
+"""Bad: the CHANGES.md PR 5 class -- truthiness on version/ticket
+integers.  ``at_version=0`` is the real seed-snapshot version and
+``ticket == NO_TICKET == 0`` the sentinel; both fall through ``if``."""
+NO_TICKET = 0
+
+
+def wait_covered(store, at_version=None, ticket=NO_TICKET):
+    if at_version:  # version 0 skips the wait entirely
+        store.wait_version(at_version)
+    if not ticket:  # works today, breaks when sentinels change
+        return
+    store.wait_ticket(ticket)

@@ -1,0 +1,11 @@
+"""Good: explicit sentinel comparisons -- 0 stays a first-class
+version/ticket value."""
+NO_TICKET = 0
+
+
+def wait_covered(store, at_version=None, ticket=NO_TICKET):
+    if at_version is not None:
+        store.wait_version(at_version)
+    if ticket == NO_TICKET:
+        return
+    store.wait_ticket(ticket)

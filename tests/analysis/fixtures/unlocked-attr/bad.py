@@ -1,0 +1,17 @@
+"""Bad: ``_applied`` is written under the lock by the updater but read
+bare by callers -- a torn/stale read on free-threaded builds, and the
+shape that hid the PR 5/6 watermark races."""
+from repro.analysis.shadow import make_lock
+
+
+class Watermark:
+    def __init__(self):
+        self._lock = make_lock("store.lock")
+        self._applied = 0
+
+    def advance(self, ticket):
+        with self._lock:
+            self._applied = ticket
+
+    def applied(self):
+        return self._applied  # read outside the lock

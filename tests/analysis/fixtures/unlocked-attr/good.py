@@ -1,0 +1,22 @@
+"""Good: every cross-thread access goes through the lock; a deliberate
+lock-free fast path carries a reviewed inline ignore (the
+``SnapshotStore.current()`` pattern)."""
+from repro.analysis.shadow import make_lock
+
+
+class Watermark:
+    def __init__(self):
+        self._lock = make_lock("store.lock")
+        self._applied = 0
+
+    def advance(self, ticket):
+        with self._lock:
+            self._applied = ticket
+
+    def applied(self):
+        with self._lock:
+            return self._applied
+
+    def applied_fast(self):
+        # GIL-atomic int read, monotonic consumer: reviewed exception
+        return self._applied  # analysis: ignore[unlocked-attr]

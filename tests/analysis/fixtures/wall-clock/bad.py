@@ -1,0 +1,12 @@
+"""Bad: deadline/interval arithmetic on the wall clock.  An NTP step
+mid-wait shrinks or inflates every computed deadline (the front door's
+original deadline bug shape)."""
+import time
+
+
+def bounded_wait(work, timeout):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if work():
+            return True
+    return False

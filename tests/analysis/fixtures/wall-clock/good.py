@@ -1,0 +1,16 @@
+"""Good: monotonic deadlines; a true epoch stamp (display only)
+carries the reviewed inline ignore."""
+import time
+
+
+def bounded_wait(work, timeout):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if work():
+            return True
+    return False
+
+
+def stamp_record(rec):
+    rec["unix_ts"] = time.time()  # analysis: ignore[wall-clock]
+    return rec

@@ -1,0 +1,273 @@
+"""The AST lock-order analyzer: registry extraction, held-set tracking
+(with-blocks, acquire/release, branch union), call-edge resolution, and
+every lock rule against minimal class snippets -- the static half of
+the PR 6 lock-convoy regression story."""
+
+import ast
+
+from repro.analysis import lockorder
+
+
+def analyze(source, path="snippet.py"):
+    return lockorder.analyze([(path, ast.parse(source))])
+
+
+def by_rule(findings, rule):
+    return [f for f in findings if f.rule == rule]
+
+
+def test_hierarchy_inversion_flagged():
+    found = analyze("""
+from repro.analysis.shadow import make_condition, make_lock
+class Publisher:
+    def __init__(self):
+        self._lock = make_lock("store.lock")
+        self._cond = make_condition("frontdoor.cond")
+    def publish(self):
+        with self._lock:
+            with self._cond:
+                pass
+""")
+    hits = by_rule(found, "lock-order")
+    assert hits and "store.lock" in hits[0].message
+    assert hits[0].context == "Publisher.publish"
+
+
+def test_descending_order_clean():
+    assert not analyze("""
+from repro.analysis.shadow import make_condition, make_lock
+class Dispatcher:
+    def __init__(self):
+        self._cond = make_condition("frontdoor.cond")
+        self._lock = make_lock("store.lock")
+    def dispatch(self):
+        with self._cond:
+            with self._lock:
+                pass
+""")
+
+
+def test_inversion_through_call_edge():
+    # publish() holds store.lock and calls _wake(), which takes the
+    # front door's condition: the nesting only exists across the edge
+    found = analyze("""
+from repro.analysis.shadow import make_condition, make_lock
+class Publisher:
+    def __init__(self):
+        self._lock = make_lock("store.lock")
+        self._cond = make_condition("frontdoor.cond")
+    def publish(self):
+        with self._lock:
+            self._wake()
+    def _wake(self):
+        with self._cond:
+            pass
+""")
+    assert by_rule(found, "lock-order")
+
+
+def test_cross_class_edge_through_annotated_attr():
+    # the FrontDoor -> SPCService shape: the dispatcher holds its
+    # condition and probes a service method that takes service.cond
+    found = analyze("""
+from repro.analysis.shadow import make_condition
+class Service:
+    def __init__(self):
+        self._cond = make_condition("service.cond")
+    def probe(self):
+        with self._cond:
+            pass
+class Door:
+    def __init__(self, service: Service):
+        self._service = service
+        self._cond = make_condition("frontdoor.cond")
+    def take(self):
+        with self._cond:
+            self._service.probe()
+""")
+    assert not found  # frontdoor.cond (0) -> service.cond (3): legal
+
+    found = analyze("""
+from repro.analysis.shadow import make_condition
+class Service:
+    def __init__(self):
+        self._cond = make_condition("service.cond")
+    def probe(self, door: "Door"):
+        with self._cond:
+            door.take()
+class Door:
+    def __init__(self):
+        self._cond = make_condition("frontdoor.cond")
+    def take(self):
+        with self._cond:
+            pass
+""")
+    assert by_rule(found, "lock-order")  # service.cond -> frontdoor.cond
+
+
+def test_undeclared_nested_lock_flagged():
+    found = analyze("""
+import threading
+from repro.analysis.shadow import make_lock
+class Store:
+    def __init__(self):
+        self._outer = make_lock("store.lock")
+        self._anon = threading.Lock()
+    def swap(self):
+        with self._outer:
+            with self._anon:
+                pass
+""")
+    assert by_rule(found, "lock-undeclared")
+
+
+def test_standalone_anonymous_leaf_ok():
+    assert not analyze("""
+import threading
+class Leaf:
+    def __init__(self):
+        self._anon = threading.Lock()
+    def bump(self):
+        with self._anon:
+            pass
+""")
+
+
+def test_reentry_of_plain_lock_flagged_rlock_ok():
+    found = analyze("""
+from repro.analysis.shadow import make_lock
+class Counter:
+    def __init__(self):
+        self._lock = make_lock("serve_stats.lock")
+    def bump(self):
+        with self._lock:
+            self._read()
+    def _read(self):
+        with self._lock:
+            pass
+""")
+    assert by_rule(found, "lock-reentry")
+    assert not analyze("""
+from repro.analysis.shadow import make_rlock
+class Cache:
+    def __init__(self):
+        self._lock = make_rlock("service.reader_lock")
+    def lookup(self):
+        with self._lock:
+            self._build()
+    def _build(self):
+        with self._lock:
+            pass
+""")
+
+
+def test_cond_wait_requires_held():
+    found = analyze("""
+from repro.analysis.shadow import make_condition
+class Waiter:
+    def __init__(self):
+        self._cond = make_condition("service.cond")
+    def bad(self):
+        self._cond.wait(0.1)
+    def good(self):
+        with self._cond:
+            self._cond.wait(0.1)
+""")
+    hits = by_rule(found, "cond-wait-unheld")
+    assert len(hits) == 1 and hits[0].context == "Waiter.bad"
+
+
+def test_unlocked_attr_read_flagged():
+    found = analyze("""
+from repro.analysis.shadow import make_lock
+class Watermark:
+    def __init__(self):
+        self._lock = make_lock("store.lock")
+        self._applied = 0
+    def advance(self, t):
+        with self._lock:
+            self._applied = t
+    def bad(self):
+        return self._applied
+    def good(self):
+        with self._lock:
+            return self._applied
+""")
+    hits = by_rule(found, "unlocked-attr")
+    assert len(hits) == 1 and hits[0].context == "Watermark.bad"
+
+
+def test_branch_exclusive_acquires_not_reentry():
+    # the SPCService.submit admission shape: both branches acquire the
+    # same lock, mutually exclusively -- must NOT report re-entry
+    assert not analyze("""
+from repro.analysis.shadow import make_lock
+class Admission:
+    def __init__(self):
+        self._lock = make_lock("service.submit_lock")
+    def submit(self, deadline):
+        if deadline is None:
+            self._lock.acquire()
+        elif not self._lock.acquire(timeout=deadline):
+            raise TimeoutError
+        try:
+            pass
+        finally:
+            self._lock.release()
+""")
+
+
+def test_acquire_release_tracks_held_set():
+    found = analyze("""
+from repro.analysis.shadow import make_condition, make_lock
+class Mixed:
+    def __init__(self):
+        self._lock = make_lock("store.lock")
+        self._cond = make_condition("frontdoor.cond")
+    def bad(self):
+        self._lock.acquire()
+        with self._cond:
+            pass
+        self._lock.release()
+""")
+    assert by_rule(found, "lock-order")
+
+
+def test_locks_required_seeds_held_set():
+    # _take_ready's contract: decorated callee counts as holding the
+    # condition, so its attribute writes are lock-protected, and a
+    # caller that nests under it is checked from that seed
+    found = analyze("""
+from repro.analysis.shadow import locks_required, make_condition
+class Door:
+    def __init__(self):
+        self._cond = make_condition("frontdoor.cond")
+        self._queued = 0
+    def enqueue(self):
+        with self._cond:
+            self._queued += 1
+    @locks_required("frontdoor.cond")
+    def take(self):
+        self._queued -= 1
+""")
+    assert not by_rule(found, "unlocked-attr")
+
+
+def test_lambda_bodies_skipped():
+    # documented static limit: the drain-predicate lambda runs under
+    # the condition at runtime but is statically invisible
+    assert not analyze("""
+from repro.analysis.shadow import make_condition
+class Svc:
+    def __init__(self):
+        self._cond = make_condition("service.cond")
+        self._applied = 0
+    def advance(self):
+        with self._cond:
+            self._applied += 1
+    def drain(self):
+        self._wait(lambda: self._applied > 0)
+    def _wait(self, done):
+        with self._cond:
+            self._cond.wait_for(done)
+""")

@@ -1,0 +1,216 @@
+"""Per-module lint rules: each encodes one shipped bug class, so every
+test here is a distilled regression of a CHANGES.md entry (PR 3
+INTERPRET snapshot, PR 5 at_version=0, wall-clock deadlines, swallowed
+UpdaterError), plus the suppression machinery (inline ignores +
+fingerprint baseline)."""
+
+import ast
+import json
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis import rules
+from repro.analysis.findings import Finding
+
+
+def run_rule(rule, source):
+    tree = ast.parse(source)
+    return [f for f in rules.ALL_RULES[rule]("snippet.py", tree)]
+
+
+def all_rules(source):
+    return rules.run("snippet.py", ast.parse(source))
+
+
+# -- env-import-snapshot ---------------------------------------------------
+def test_env_read_at_import_flagged():
+    found = run_rule("env-import-snapshot", """
+import os
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+""")
+    assert len(found) == 1 and found[0].line == 3
+
+
+def test_env_read_in_class_body_is_import_time():
+    found = run_rule("env-import-snapshot", """
+import os
+class Config:
+    debug = os.environ["DEBUG"]
+""")
+    assert len(found) == 1 and found[0].context == "Config"
+
+
+def test_env_read_inside_function_ok():
+    assert not run_rule("env-import-snapshot", """
+import os
+def resolve(flag=None):
+    if flag is not None:
+        return bool(flag)
+    return os.environ.get("FLAG", "0") == "1"
+""")
+
+
+# -- truthy-version --------------------------------------------------------
+def test_truthy_version_if_and_not():
+    found = run_rule("truthy-version", """
+def wait(store, at_version=None, ticket=0):
+    if at_version:
+        store.wait_version(at_version)
+    if not ticket:
+        return
+""")
+    assert [f.line for f in found] == [3, 5]
+
+
+def test_truthy_version_or_fallback():
+    # the exact at_version=0 shape: `version or default` drops 0
+    found = run_rule("truthy-version", """
+def pin(version, store):
+    return version or store.version
+""")
+    assert found and found[0].line == 3
+
+
+def test_explicit_comparisons_ok():
+    assert not run_rule("truthy-version", """
+NO_TICKET = 0
+def wait(store, at_version=None, ticket=NO_TICKET):
+    if at_version is not None:
+        store.wait_version(at_version)
+    if ticket == NO_TICKET:
+        return
+""")
+
+
+def test_plural_containers_not_versionish():
+    assert not run_rule("truthy-version", """
+def prune(self):
+    if self.tickets:
+        self.tickets.clear()
+    while self.versions:
+        self.versions.popitem()
+""")
+
+
+# -- wall-clock ------------------------------------------------------------
+def test_wall_clock_flagged_monotonic_ok():
+    found = run_rule("wall-clock", """
+import time
+def deadline(t):
+    return time.time() + t
+def deadline_ok(t):
+    return time.monotonic() + t
+""")
+    assert len(found) == 1 and found[0].context == "deadline"
+
+
+# -- broad-except ----------------------------------------------------------
+def test_bare_and_broad_swallowing_flagged():
+    found = run_rule("broad-except", """
+def drain(apply, item):
+    try:
+        apply(item)
+    except Exception:
+        pass
+    try:
+        apply(item)
+    except:
+        return None
+""")
+    assert len(found) == 2
+
+
+def test_broad_but_routed_or_reraised_ok():
+    assert not run_rule("broad-except", """
+def drain(apply, item, fail):
+    try:
+        apply(item)
+    except Exception as exc:
+        fail(exc)
+    try:
+        apply(item)
+    except Exception:
+        raise
+    try:
+        apply(item)
+    except ValueError:
+        pass
+""")
+
+
+# -- jit-nondeterminism ----------------------------------------------------
+def test_env_resolution_inside_jit_flagged():
+    found = run_rule("jit-nondeterminism", """
+import functools, os, jax
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def entry(x, *, interpret=None):
+    if interpret is None:
+        interpret = resolve_interpret(interpret)
+    return x
+""")
+    assert found and found[0].context == "entry"
+
+
+def test_unjitted_resolution_ok():
+    assert not run_rule("jit-nondeterminism", """
+import functools, jax
+def entry(x, *, interpret=None):
+    return _jit(x, interpret=resolve_interpret(interpret))
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _jit(x, *, interpret):
+    return x
+""")
+
+
+def test_clock_inside_bare_jit_decorator_flagged():
+    found = run_rule("jit-nondeterminism", """
+import time, jax
+@jax.jit
+def f(x):
+    return x + time.time()
+""")
+    assert len(found) == 1
+
+
+# -- suppressions ----------------------------------------------------------
+def test_inline_ignore_specific_and_blanket():
+    src = ("a = 1  # analysis: ignore[wall-clock]\n"
+           "b = 2  # analysis: ignore[wall-clock, truthy-version]\n"
+           "c = 3  # analysis: ignore\n")
+    ig = baseline_mod.inline_ignores(src)
+    assert ig[1] == {"wall-clock"}
+    assert ig[2] == {"wall-clock", "truthy-version"}
+    assert ig[3] == {baseline_mod.ALL}
+    findings = [Finding("f.py", 1, "wall-clock", "m"),
+                Finding("f.py", 1, "truthy-version", "m"),
+                Finding("f.py", 3, "broad-except", "m")]
+    kept = baseline_mod.apply_inline(findings, {"f.py": ig})
+    assert [(f.line, f.rule) for f in kept] == [(1, "truthy-version")]
+
+
+def test_baseline_roundtrip_and_split(tmp_path):
+    f_old = Finding("f.py", 10, "wall-clock", "old debt", "g")
+    f_new = Finding("f.py", 20, "wall-clock", "fresh", "h")
+    path = tmp_path / "baseline.json"
+    baseline_mod.save(str(path), [f_old])
+    known = baseline_mod.load(str(path))
+    assert f_old.fingerprint in known
+    new, old = baseline_mod.split([f_old, f_new], known)
+    assert [f.message for f in new] == ["fresh"]
+    assert [f.message for f in old] == ["old debt"]
+
+
+def test_fingerprint_is_line_free():
+    a = Finding("f.py", 10, "wall-clock", "m", "g")
+    b = Finding("f.py", 99, "wall-clock", "m", "g")
+    assert a.fingerprint == b.fingerprint
+
+
+def test_baseline_rejects_non_list(tmp_path):
+    path = tmp_path / "b.json"
+    path.write_text(json.dumps({"not": "a list"}))
+    try:
+        baseline_mod.load(str(path))
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("expected ValueError")

@@ -1,0 +1,94 @@
+"""The CLI / CI gate, run in tier-1: the rule fixtures must all pass
+``--self-test``, and the repo's own ``src`` tree must scan clean with
+the shipped (empty) baseline -- the exact command the CI gate runs."""
+
+import io
+import json
+import os
+
+from repro.analysis import cli
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__),
+                                     "..", ".."))
+
+
+def run(argv):
+    out = io.StringIO()
+    code = cli.main(argv, out=out)
+    return code, out.getvalue()
+
+
+def test_self_test_fixtures_pass():
+    out = io.StringIO()
+    assert cli.self_test(out=out) == 0, out.getvalue()
+    assert "0 failures" in out.getvalue()
+
+
+def test_src_tree_is_analyzer_clean():
+    # the acceptance criterion: zero unbaselined findings over src
+    code, out = run([os.path.join(REPO, "src")])
+    assert code == 0, out
+    assert "0 findings" in out
+
+
+def test_findings_format_and_exit_code(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import time\n"
+                   "def deadline(t):\n"
+                   "    return time.time() + t\n")
+    code, out = run([str(bad)])
+    assert code == 1
+    line = out.splitlines()[0]
+    assert line.startswith(f"{bad}:3 wall-clock ")
+
+
+def test_write_baseline_then_clean(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import time\n"
+                   "def deadline(t):\n"
+                   "    return time.time() + t\n")
+    base = tmp_path / "baseline.json"
+    code, _ = run(["--baseline", str(base), "--write-baseline", str(bad)])
+    assert code == 0
+    assert json.loads(base.read_text())  # non-empty fingerprint list
+    code, out = run(["--baseline", str(base), str(bad)])
+    assert code == 0 and "(1 baselined)" in out
+    # a NEW finding still fails the gate
+    bad.write_text(bad.read_text() +
+                   "def window(t):\n"
+                   "    return time.time() - t\n")
+    code, out = run(["--baseline", str(base), str(bad)])
+    assert code == 1 and "(1 baselined)" in out
+
+
+def test_shipped_baseline_is_empty():
+    shipped = os.path.join(REPO, "src", "repro", "analysis",
+                           "baseline.json")
+    assert json.loads(open(shipped).read()) == []
+
+
+def test_list_rules_covers_every_rule():
+    code, out = run(["--list-rules"])
+    assert code == 0
+    for rule in ("lock-order", "lock-undeclared", "lock-reentry",
+                 "cond-wait-unheld", "unlocked-attr",
+                 "env-import-snapshot", "truthy-version", "wall-clock",
+                 "broad-except", "jit-nondeterminism"):
+        assert rule in out
+
+
+def test_syntax_error_reported_not_crash(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    code, out = run([str(bad)])
+    assert code == 2 and "parse-error" in out
+
+
+def test_fixture_dirs_skipped_in_tree_scan(tmp_path):
+    # deliberate-violation fixtures must not fail a tree scan
+    fdir = tmp_path / "fixtures"
+    fdir.mkdir()
+    (fdir / "bad.py").write_text("import time\nX = time.time()\n")
+    (tmp_path / "ok.py").write_text("A = 1\n")
+    code, out = run([str(tmp_path)])
+    assert code == 0, out

@@ -1,0 +1,161 @@
+"""The runtime shadow checker: zero-overhead-when-off factories, the
+deliberate-violation proofs that it actually fires (lock-order
+inversion, illegal re-entry, unheld wait, lock-across-dispatch), and
+the bounded-probe/reentrancy carve-outs the serve layer relies on."""
+
+import threading
+
+import pytest
+
+from repro.analysis import shadow
+from repro.analysis.shadow import (LockHierarchyViolation,
+                                   assert_no_locks_held, held_locks,
+                                   locks_required, make_condition,
+                                   make_lock, make_rlock)
+
+
+@pytest.fixture
+def shadowed(monkeypatch):
+    monkeypatch.setenv(shadow.ENV_FLAG, "1")
+
+
+def test_factories_return_plain_primitives_when_off(monkeypatch):
+    monkeypatch.delenv(shadow.ENV_FLAG, raising=False)
+    assert isinstance(make_lock("store.lock"), type(threading.Lock()))
+    assert isinstance(make_rlock("service.reader_lock"),
+                      type(threading.RLock()))
+    assert isinstance(make_condition("service.cond"),
+                      threading.Condition)
+
+
+def test_env_read_at_call_time_not_import(monkeypatch):
+    # the PR 3 class applied to the gate itself: flipping the env var
+    # must take effect without reimporting the module
+    monkeypatch.delenv(shadow.ENV_FLAG, raising=False)
+    assert not shadow.shadow_enabled()
+    monkeypatch.setenv(shadow.ENV_FLAG, "1")
+    assert shadow.shadow_enabled()
+
+
+def test_unknown_lock_name_rejected(shadowed):
+    with pytest.raises(LockHierarchyViolation, match="not declared"):
+        make_lock("no.such.lock")
+
+
+def test_inversion_fires(shadowed):
+    store = make_lock("store.lock")          # rank 5
+    cond = make_condition("frontdoor.cond")  # rank 0
+    with store:
+        with pytest.raises(LockHierarchyViolation, match="inverts"):
+            cond.acquire()
+    assert not held_locks()
+
+
+def test_descending_order_clean(shadowed):
+    cond = make_condition("frontdoor.cond")
+    store = make_lock("store.lock")
+    with cond:
+        with store:
+            assert held_locks() == ("frontdoor.cond", "store.lock")
+    assert not held_locks()
+
+
+def test_nonreentrant_reentry_fires_rlock_ok(shadowed):
+    lock = make_lock("store.lock")
+    with lock:
+        with pytest.raises(LockHierarchyViolation, match="re-entry"):
+            lock.acquire()
+    rlock = make_rlock("service.reader_lock")
+    with rlock:
+        with rlock:
+            assert held_locks() == ("service.reader_lock",) * 2
+    assert not held_locks()
+
+
+def test_bounded_reacquire_is_a_probe_not_a_deadlock(shadowed):
+    # SPCService.submit's timed admission acquire must stay legal
+    lock = make_lock("service.submit_lock")
+    with lock:
+        assert lock.acquire(timeout=0.01) is False
+        assert lock.acquire(blocking=False) is False
+    assert not held_locks()
+
+
+def test_wait_requires_held_and_releases_in_stack(shadowed):
+    cond = make_condition("service.cond")
+    with pytest.raises(LockHierarchyViolation, match="without holding"):
+        cond.wait(0.01)
+    with pytest.raises(LockHierarchyViolation, match="without holding"):
+        cond.notify_all()
+    with cond:
+        assert held_locks() == ("service.cond",)
+        cond.wait(0.01)  # legal; stack restored after the wait
+        assert held_locks() == ("service.cond",)
+
+
+def test_wait_reacquires_down_rank_legally(shadowed):
+    # while cond.wait() sleeps the lock is NOT held: another acquire of
+    # a lower rank afterwards must not see a stale stack entry
+    cond = make_condition("service.cond")      # rank 3
+    store = make_lock("store.lock")            # rank 5
+    with cond:
+        cond.wait(0.01)
+        with store:
+            assert held_locks() == ("service.cond", "store.lock")
+
+
+def test_assert_no_locks_held(shadowed):
+    assert_no_locks_held("test")  # clean stack: no-op
+    lock = make_lock("store.lock")
+    with lock:
+        with pytest.raises(LockHierarchyViolation, match="dispatch"):
+            assert_no_locks_held("QueryEngine.query_batch")
+
+
+def test_assert_no_locks_held_noop_when_off(monkeypatch):
+    monkeypatch.setenv(shadow.ENV_FLAG, "1")
+    lock = make_lock("store.lock")
+    monkeypatch.delenv(shadow.ENV_FLAG)
+    with lock:
+        assert_no_locks_held("anywhere")  # gate off: never raises
+
+
+def test_locks_required_enforced(shadowed):
+    cond = make_condition("frontdoor.cond")
+
+    @locks_required("frontdoor.cond")
+    def take():
+        return True
+
+    with pytest.raises(LockHierarchyViolation, match="requires"):
+        take()
+    with cond:
+        assert take() is True
+    assert take.__locks_required__ == ("frontdoor.cond",)
+
+
+def test_violation_is_assertion_error(shadowed):
+    # pytest and plain `assert`-aware harnesses both catch it
+    assert issubclass(LockHierarchyViolation, AssertionError)
+
+
+def test_cross_thread_stacks_independent(shadowed):
+    # held stacks are per-thread: thread B holding a low-rank lock must
+    # not poison thread A's checks
+    cond = make_condition("frontdoor.cond")
+    store = make_lock("store.lock")
+    cond.acquire()
+    errors = []
+
+    def other():
+        try:
+            with store:  # fresh stack: legal despite A holding cond
+                pass
+        except LockHierarchyViolation as exc:  # pragma: no cover
+            errors.append(exc)
+
+    th = threading.Thread(target=other)
+    th.start()
+    th.join()
+    cond.release()
+    assert not errors and not held_locks()

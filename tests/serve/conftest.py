@@ -1,0 +1,18 @@
+"""Every serve test runs under the runtime shadow checker.
+
+``REPRO_SHADOW_LOCKS=1`` makes the ``repro.analysis.shadow`` factories
+hand out instrumented locks, so every FrontDoor / SPCService /
+SnapshotStore interleaving these suites exercise is checked against the
+declared lock hierarchy (plus the no-lock-across-dispatch guard) on
+every CI run -- a ``LockHierarchyViolation`` fails the test that
+triggered it.  The factories read the env var at *lock creation* time,
+and every service/store/door here is constructed inside a test, so the
+function-scoped fixture is enough.
+"""
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def shadow_locks(monkeypatch):
+    monkeypatch.setenv("REPRO_SHADOW_LOCKS", "1")
