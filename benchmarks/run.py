@@ -21,7 +21,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table4,figure7,figure8_9,figure10,"
                          "figure11,table5,hybrid,serving,dist_update,"
-                         "publish,service,frontdoor,kernels")
+                         "publish,service,frontdoor,construct,kernels")
     args = ap.parse_args()
 
     wanted = set(args.only.split(",")) if args.only else None
@@ -79,6 +79,8 @@ def main() -> None:
         frontdoor_rows = go("frontdoor", P.frontdoor_table, n=120, m=300,
                             n_events=12, update_batch=4, readers=8,
                             queries_per_reader=80, reps=2)
+        construct_rows = go("construct", P.construct_table,
+                            sizes=((400, 1200), (1000, 3000)), hub_batch=32)
     else:
         go("table4", P.table4)
         go("figure7", P.figure7)
@@ -92,6 +94,7 @@ def main() -> None:
         publish_rows = go("publish", P.publish_table)
         service_rows = go("service", P.service_table)
         frontdoor_rows = go("frontdoor", P.frontdoor_table)
+        construct_rows = go("construct", P.construct_table)
     root = pathlib.Path(__file__).resolve().parent.parent
     if hybrid_rows is not None:
         out = root / "BENCH_hybrid.json"
@@ -116,6 +119,10 @@ def main() -> None:
     if frontdoor_rows is not None:
         out = root / "BENCH_frontdoor.json"
         out.write_text(json.dumps(frontdoor_rows, indent=2) + "\n")
+        print(f"wrote {out}")
+    if construct_rows is not None:
+        out = root / "BENCH_construct.json"
+        out.write_text(json.dumps(construct_rows, indent=2) + "\n")
         print(f"wrote {out}")
     go("kernels", lambda: (kernels_bench.query_kernel_vs_jnp(),
                            kernels_bench.segment_matmul_vs_segment_sum()))

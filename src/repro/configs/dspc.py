@@ -20,6 +20,10 @@ class DSPCArchConfig:
     m: int = 524288           # undirected edges
     l_cap: int = 64           # label capacity per vertex
     query_batch: int = 1_048_576
+    # -- construction knobs (repro.core.construct) ----------------------
+    construct_batch: int = 32   # hubs per batched-build round (PSPC);
+    # None / < 2 falls back to the sequential one-hub-per-round builder
+    vertex_order: str = "id"    # "id" | "degree" hub-ordering strategy
     # -- SPCService knobs (repro.serve.service) -------------------------
     update_batch: int = 64    # events per jitted apply_events chunk
     queue_size: int = 8       # bounded ingest queue (backpressure point)
@@ -34,7 +38,8 @@ class DSPCArchConfig:
 
 CONFIG = DSPCArchConfig()
 SMOKE = DSPCArchConfig(name="dspc-smoke", n=64, m=160, l_cap=16,
-                       query_batch=256, update_batch=8, queue_size=4,
+                       query_batch=256, construct_batch=8,
+                       update_batch=8, queue_size=4,
                        replicas=2, max_live_batches=2, dispatchers=2,
                        deadline_s=10.0, frontdoor_batch=64)
 

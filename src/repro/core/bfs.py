@@ -40,12 +40,33 @@ from repro.core.graph import INF, Graph
 #: sums of frontier counts over the (possibly sharded) edge list.
 RelaxFn = Callable[[jax.Array, jax.Array, jax.Array, jax.Array], jax.Array]
 
+#: ``multi_relax_fn(src, dst, cnt, frontier) -> int64[B, n + 1]``: the
+#: multi-source generalization of :data:`RelaxFn` -- ``cnt`` and
+#: ``frontier`` carry a leading hub-batch axis and the relaxation
+#: advances all B independent BFS one level in a single pass over the
+#: (possibly sharded) edge list.  This is the PSPC seam: batched index
+#: construction builds many hubs' labels per dispatch against it, and
+#: the distributed variant (``repro.core.distributed
+#: .make_sharded_multi_relax``) keeps the one-psum-per-level contract
+#: of the single-source path.
+MultiRelaxFn = Callable[
+    [jax.Array, jax.Array, jax.Array, jax.Array], jax.Array]
+
 
 class BFSResult(NamedTuple):
     dist: jax.Array   # int32[n + 1] (INF where unreached)
     cnt: jax.Array    # int64[n + 1]
     keep: jax.Array   # bool[n + 1]: visited AND not pruned
     levels: jax.Array  # int32: number of relaxation rounds executed
+
+
+class MultiBFSResult(NamedTuple):
+    """Per-hub-batch BFS state: every array carries a leading [B] axis."""
+
+    dist: jax.Array   # int32[B, n + 1] (INF where unreached)
+    cnt: jax.Array    # int64[B, n + 1]
+    keep: jax.Array   # bool[B, n + 1]: visited AND not pruned
+    levels: jax.Array  # int32: relaxation rounds until EVERY BFS drained
 
 
 def edge_relax(src: jax.Array, dst: jax.Array, cnt: jax.Array,
@@ -62,6 +83,36 @@ def edge_relax(src: jax.Array, dst: jax.Array, cnt: jax.Array,
 def relax(g: Graph, cnt: jax.Array, frontier: jax.Array) -> jax.Array:
     """Graph-level convenience wrapper over :func:`edge_relax`."""
     return edge_relax(g.src, g.dst, cnt, frontier)
+
+
+def compress_frontier(cnt: jax.Array, frontier: jax.Array) -> jax.Array:
+    """Fuse (frontier, cnt) into one masked-count operand, int64[B, n+1].
+
+    The frontier-compression step of the multi-source relaxation: the
+    naive transcription gathers ``frontier[:, src]`` AND ``cnt[:, src]``
+    per edge ([B, E] each) and multiplies.  Frontier and counts only
+    ever appear as the product ``frontier * cnt``, so masking once on
+    the [B, n + 1] vertex side halves the edge-gather traffic -- the
+    only O(B E) term of a level -- and hands shard_map a single operand
+    to slice.
+    """
+    return jnp.where(frontier, cnt, jnp.int64(0))
+
+
+def multi_edge_relax(src: jax.Array, dst: jax.Array, cnt: jax.Array,
+                     frontier: jax.Array) -> jax.Array:
+    """One edge relaxation of B independent BFS: int64[B, n + 1] sums.
+
+    The single-device default :data:`MultiRelaxFn`: per-destination
+    segment-sums of compressed frontier counts, vectorized over the
+    hub-batch axis.  ``n + 1`` is recovered from ``cnt`` so the same
+    signature serves sharded edge blocks.
+    """
+    masked = compress_frontier(cnt, frontier)
+    contrib = masked[:, src]  # [B, E] -- the single per-level edge gather
+    return jax.vmap(
+        lambda c: jax.ops.segment_sum(c, dst, num_segments=cnt.shape[1])
+    )(contrib)
 
 
 def pruned_spc_bfs(
@@ -127,6 +178,104 @@ def pruned_spc_bfs(
     dist, cnt, frontier, keep, level, rounds = jax.lax.while_loop(
         cond, body, (dist, cnt, frontier, keep, level, jnp.int32(0)))
     return BFSResult(dist=dist, cnt=cnt, keep=keep, levels=rounds)
+
+
+def multi_pruned_spc_bfs(
+    g: Graph,
+    roots: jax.Array,
+    dbar: jax.Array,
+    rank_floor: bool = True,
+    batch_rank_prune: bool = True,
+    max_levels: int | None = None,
+    multi_relax_fn: MultiRelaxFn | None = None,
+) -> MultiBFSResult:
+    """B pruned counting BFS advanced in lockstep (PSPC-style batching).
+
+    One iteration of the single ``lax.while_loop`` relaxes *every*
+    BFS of the batch one level (:func:`multi_edge_relax`), so a whole
+    batch of hubs costs one loop's worth of dispatch overhead instead
+    of B sequential loops.  Used by batched index construction
+    (``repro.core.construct.build_index_batched``).
+
+    Args:
+      g: the graph (edge list).
+      roots: int32[B] seed vertices, strictly ascending ids.  A root
+        ``>= g.n`` marks an inactive tail lane (last batch of a build):
+        its BFS never starts and its ``keep`` row stays all-False.
+      dbar: int32[B, n + 1] *committed* pruning distances -- PreQuery of
+        each root against the labels of all hubs ranked above the whole
+        batch, precomputed once (constant during the batch).
+      rank_floor: apply the paper's rank pruning per lane (only
+        vertices with id >= roots[b] may be discovered).
+      batch_rank_prune: rank-masked IN-batch pruning -- the step that
+        makes lockstep construction order-identical to sequential.  A
+        vertex w newly discovered by lane b at distance d is also
+        pruned if some earlier lane b' < b (a higher-ranked in-batch
+        hub) yields ``dist_b'[roots[b]] + dist_b'[w] < d`` through
+        vertices it *kept*: exactly the label pair
+        ``(L(roots[b])[h_b'], L(w)[h_b'])`` the sequential build would
+        have committed before lane b ran.  Both terms of any pruning
+        sum are < d, i.e. discovered at strictly earlier levels, so the
+        lockstep state always already holds them -- no replay needed.
+      max_levels: loop bound (defaults to n, the worst-case diameter).
+      multi_relax_fn: multi-source relaxation primitive; default
+        :func:`multi_edge_relax` (single-device).  Distributed callers
+        pass ``repro.core.distributed.make_sharded_multi_relax``.
+    """
+    if multi_relax_fn is None:
+        multi_relax_fn = multi_edge_relax
+    n1 = g.n + 1
+    b = roots.shape[0]
+    ids = jnp.arange(n1, dtype=jnp.int32)
+    roots = jnp.asarray(roots, jnp.int32)
+    valid = roots < g.n                                    # [B]
+    roots_c = jnp.minimum(roots, g.n)                      # safe gather index
+    eligible = jnp.broadcast_to(ids[None, :] < g.n, (b, n1))
+    if rank_floor:
+        eligible &= ids[None, :] >= roots[:, None]
+
+    at_root = (ids[None, :] == roots[:, None]) & valid[:, None]
+    dist = jnp.where(at_root, jnp.int32(0), INF)
+    cnt = jnp.where(at_root, jnp.int64(1), jnp.int64(0))
+    # root keep mirrors the sequential builder: dbar[root] >= 0 always
+    # holds during construction, so valid roots are always kept
+    frontier = at_root & (jnp.take_along_axis(
+        dbar, roots_c[:, None], axis=1) >= 0)
+    keep = frontier
+    if max_levels is None:
+        max_levels = g.n
+    lane = jnp.arange(b, dtype=jnp.int32)
+
+    def cond(state):
+        _, _, frontier, _, rounds = state
+        return jnp.any(frontier) & (rounds < max_levels)
+
+    def body(state):
+        dist, cnt, frontier, keep, rounds = state
+        sums = multi_relax_fn(g.src, g.dst, cnt, frontier)
+        newly = (sums > 0) & (dist == INF) & eligible
+        d_new = rounds + 1
+        dist2 = jnp.where(newly, d_new, dist)
+        cnt2 = jnp.where(newly, sums, cnt)
+        pruned = newly & (dbar < d_new)
+        if batch_rank_prune:
+            # dbar_in[b, w] = min over lanes b' < b of
+            #   dist_b'[roots[b]] + dist_b'[w], keep-masked on both ends
+            # -- evaluated on the PRE-level state: every term of a sum
+            # <= rounds was discovered at a level < d_new, so later
+            # discoveries can never contribute a pruning pair.
+            hub_d = dist[:, roots_c]                       # [B', B]
+            hub_ok = keep[:, roots_c] & (lane[:, None] < lane[None, :])
+            a = jnp.where(hub_ok, hub_d, INF)              # [B', B]
+            dm = jnp.where(keep, dist, INF)                # [B', n+1]
+            dbar_in = jnp.min(a[:, :, None] + dm[:, None, :], axis=0)
+            pruned |= newly & (dbar_in < d_new)
+        frontier2 = newly & ~pruned
+        return dist2, cnt2, frontier2, keep | frontier2, rounds + 1
+
+    dist, cnt, frontier, keep, rounds = jax.lax.while_loop(
+        cond, body, (dist, cnt, frontier, keep, jnp.int32(0)))
+    return MultiBFSResult(dist=dist, cnt=cnt, keep=keep, levels=rounds)
 
 
 def plain_spc_bfs(g: Graph, root, max_levels: int | None = None) -> BFSResult:

@@ -47,7 +47,8 @@ except ImportError:  # pragma: no cover - version-dependent
 from repro.core import decremental as D
 from repro.core import hybrid as H
 from repro.core import incremental as I
-from repro.core.construct import build_index
+from repro.core.bfs import compress_frontier
+from repro.core.construct import build_index, build_index_batched
 from repro.core.graph import Graph
 from repro.core.query import gather_rows, merge_rows
 
@@ -84,6 +85,38 @@ def make_sharded_relax(mesh: Mesh, edge_axis: str):
     )
 
 
+def make_sharded_multi_relax(mesh: Mesh, edge_axis: str):
+    """Edge-sharded *multi-source* relaxation (``bfs.MultiRelaxFn``).
+
+    The batched-construction analogue of :func:`make_sharded_relax`:
+    ``cnt`` / ``frontier`` carry a leading hub-batch axis and stay
+    replicated; each device gathers its edge shard's contributions for
+    ALL B lockstep BFS ([B, E/shards]) and segment-sums locally, so one
+    level of a whole hub batch still costs exactly **one psum** -- the
+    [B, n + 1] partial sums combine in a single collective, preserving
+    the per-level communication contract of the single-source path.
+    Frontier compression happens on the replicated vertex side
+    (:func:`repro.core.bfs.compress_frontier`) so the per-shard gather
+    moves one operand, not two.
+    """
+
+    def local_multi_relax(src_blk, dst_blk, cnt, frontier):
+        masked = compress_frontier(cnt, frontier)
+        contrib = masked[:, src_blk]  # [B, E/shards]
+        part = jax.vmap(
+            lambda c: jax.ops.segment_sum(c, dst_blk,
+                                          num_segments=cnt.shape[1])
+        )(contrib)
+        return jax.lax.psum(part, edge_axis)
+
+    return shard_map(
+        local_multi_relax,
+        mesh=mesh,
+        in_specs=(P(edge_axis), P(edge_axis), P(), P()),
+        out_specs=P(),
+    )
+
+
 def make_distributed_builder(mesh: Mesh, edge_axis: str = "model"):
     """HP-SPC construction with edge-sharded BFS levels.
 
@@ -112,7 +145,9 @@ class DistributedUpdater:
     edge_axis: str
     num_shards: int
     relax_fn: Callable
+    multi_relax_fn: Callable  # bfs.MultiRelaxFn, edge-sharded
     build_index: Callable    # (g, l_cap) -> SPCIndex
+    build_index_batched: Callable  # (g, l_cap=None, hub_batch=, ...) -> SPCIndex
     inc_spc: Callable        # (g, idx, a, b) -> (g, idx)
     inc_spc_batch: Callable  # (g, idx, edges[B, 2]) -> (g, idx)
     dec_spc: Callable        # (g, idx, a, b) -> (g, idx), no fast path
@@ -145,6 +180,7 @@ def make_distributed_updater(mesh: Mesh,
     overflow-retry machinery unchanged in ``mesh=`` mode.
     """
     relax_fn = make_sharded_relax(mesh, edge_axis)
+    multi_relax_fn = make_sharded_multi_relax(mesh, edge_axis)
     num_shards = int(mesh.shape[edge_axis])
     # partial() over the module-level jitted entry points: all updaters
     # (and the replicated default, relax_fn=None) share one compile
@@ -154,7 +190,10 @@ def make_distributed_updater(mesh: Mesh,
         edge_axis=edge_axis,
         num_shards=num_shards,
         relax_fn=relax_fn,
+        multi_relax_fn=multi_relax_fn,
         build_index=partial(build_index, relax_fn=relax_fn),
+        build_index_batched=partial(build_index_batched,
+                                    multi_relax_fn=multi_relax_fn),
         inc_spc=partial(I.inc_spc, relax_fn=relax_fn),
         inc_spc_batch=partial(I.inc_spc_batch, relax_fn=relax_fn),
         dec_spc=partial(D.dec_spc, relax_fn=relax_fn),

@@ -45,11 +45,14 @@ import numpy as np
 from repro.analysis.shadow import make_lock
 from repro.core import graph as G
 from repro.core import labels as L
-from repro.core.construct import build_index
+from repro.core.construct import (build_index, build_index_batched,
+                                  provision_l_cap)
 from repro.core.decremental import dec_spc
 from repro.core.graph import Graph
 from repro.core.incremental import inc_spc
 from repro.core.labels import SPCIndex
+from repro.core.order import (identity_ordering, ordering_from_state,
+                              vertex_ordering)
 
 
 #: Default chunk size for batched event replay.  Chunks are padded to
@@ -123,17 +126,29 @@ class DynamicSPC:
     """
 
     def __init__(self, n: int, edges: Sequence[Tuple[int, int]] = (),
-                 l_cap: int = 32, cap_e: int | None = None, *,
-                 mesh=None, edge_axis: str = "model") -> None:
+                 l_cap: int | None = 32, cap_e: int | None = None, *,
+                 mesh=None, edge_axis: str = "model",
+                 construct_batch: int | None = None,
+                 vertex_order: str = "id") -> None:
+        """``construct_batch`` >= 2 builds the index through the batched
+        PSPC-style constructor (``construct.build_index_batched``; same
+        index, fewer dispatches); ``vertex_order="degree"`` relabels the
+        vertex ids into degree-rank space at this driver's id boundary
+        (every public entry point translates; the engines keep their
+        rank == id invariant).  ``l_cap=None`` pre-provisions the label
+        capacity from the graph's degree statistics."""
         self.stats = UpdateStats()
         self._engine = None
         self._updater = None
         self._store = None
         self.version = 0  # bumped per committed update; state_dict carries it
+        self._construct_batch = construct_batch
+        self.order = vertex_ordering(n, edges, vertex_order)
         if mesh is not None:
             from repro.core.distributed import make_distributed_updater
             self._updater = make_distributed_updater(mesh, edge_axis)
-        self.graph = self._pad_for_mesh(G.from_edges(n, edges, cap_e))
+        self.graph = self._pad_for_mesh(
+            G.from_edges(n, self.order.edges_to_internal(edges), cap_e))
         self.index = self._build(l_cap)
 
     def _pad_for_mesh(self, g: Graph) -> Graph:
@@ -141,7 +156,19 @@ class DynamicSPC:
         return self._updater.pad(g) if self._updater is not None else g
 
     # -- construction with overflow-retry ---------------------------------
-    def _build(self, l_cap: int) -> SPCIndex:
+    def _build(self, l_cap: int | None) -> SPCIndex:
+        if self._construct_batch is not None and self._construct_batch >= 2:
+            # batched constructor: overflow-retry happens inside, per
+            # hub round from the pre-round snapshot (committed labels
+            # survive); the stats hook keeps regrow accounting at parity
+            # with the sequential path below
+            build_b = (self._updater.build_index_batched
+                       if self._updater is not None else build_index_batched)
+            return build_b(
+                self.graph, l_cap, hub_batch=self._construct_batch,
+                on_regrow=lambda _cap: self.stats.bump(label_regrows=1))
+        if l_cap is None:
+            l_cap = provision_l_cap(self.graph)
         build = (self._updater.build_index if self._updater is not None
                  else build_index)
         while True:
@@ -212,12 +239,17 @@ class DynamicSPC:
             self._store.publish(self.index, version=self.version)
 
     def query(self, s: int, t: int) -> Tuple[int, int]:
-        # bounds validation happens inside the engine (host-side)
-        return self.engine.query_pair(self.index, s, t)
+        # bounds validation happens inside the engine (host-side);
+        # to_internal is the identity (and validation-free) for the
+        # default vertex_order="id"
+        return self.engine.query_pair(
+            self.index, self.order.to_internal(s), self.order.to_internal(t))
 
     def query_batch(self, s, t, route: str | None = None):
         # bounds validation happens inside the engine (host-side)
-        return self.engine.query_batch(self.index, s, t, route=route)
+        return self.engine.query_batch(
+            self.index, self.order.to_internal(s), self.order.to_internal(t),
+            route=route)
 
     # -- updates -----------------------------------------------------------
     def _check_vertex(self, v: int, *, what: str = "vertex") -> None:
@@ -235,6 +267,7 @@ class DynamicSPC:
 
     def insert_edge(self, a: int, b: int) -> None:
         self._check_edge_ids(a, b)
+        a, b = self.order.to_internal(a), self.order.to_internal(b)
         if bool(G.has_edge(self.graph, a, b)):
             raise ValueError(f"edge ({a},{b}) already present")
         self.graph = self._pad_for_mesh(G.ensure_capacity(self.graph, 2))
@@ -252,6 +285,7 @@ class DynamicSPC:
 
     def delete_edge(self, a: int, b: int) -> None:
         self._check_edge_ids(a, b)
+        a, b = self.order.to_internal(a), self.order.to_internal(b)
         if not bool(G.has_edge(self.graph, a, b)):
             raise ValueError(f"edge ({a},{b}) not present")
         lo, hi = (a, b) if a < b else (b, a)
@@ -284,6 +318,8 @@ class DynamicSPC:
         edges = [(a, b) for a, b in edges]
         for a, b in edges:
             self._check_edge_ids(a, b)
+        edges = self.order.edges_to_internal(edges)
+        for a, b in edges:
             if bool(G.has_edge(self.graph, a, b)):
                 raise ValueError(f"edge ({a},{b}) already present")
         self.graph = self._pad_for_mesh(
@@ -305,6 +341,7 @@ class DynamicSPC:
         """Append an isolated vertex (lowest rank). Recompiles (n changes)."""
         self.graph = G.add_vertices(self.graph, 1)
         self.index = L.add_vertices(self.index, 1)
+        self.order = self.order.grow(1)  # fresh id maps to itself
         self._commit()
         return self.n - 1
 
@@ -314,16 +351,20 @@ class DynamicSPC:
         the batched engine -- one jitted dispatch per chunk instead of
         one per incident edge."""
         self._check_vertex(v)
+        vi = self.order.to_internal(v)
         src = np.asarray(self.graph.src)
         dst = np.asarray(self.graph.dst)
         # live directed slots out of v give the neighbor set in one
         # vectorized pass (tombstones/pads hold src = n, never v);
         # np.unique also delivers the sorted order the old scan produced
-        nbrs = np.unique(dst[(src == v) & (dst != self.n)])
+        nbrs = np.unique(dst[(src == vi) & (dst != self.n)])
         if not nbrs.size:
             return
-        self.apply_events([("-", v, int(u)) for u in nbrs],
-                          batch_size=batch_size)
+        # apply_events translates at ITS boundary, so hand it external
+        # ids (identity order: u == to_external(u), zero change)
+        self.apply_events(
+            [("-", v, int(self.order.to_external(u))) for u in nbrs],
+            batch_size=batch_size)
 
     # -- batched event replay (the hybrid engine) ---------------------------
     def _edge_set(self) -> set:
@@ -415,6 +456,11 @@ class DynamicSPC:
             return
 
         from repro.core.hybrid import OP_DELETE, OP_INSERT, hyb_spc_batch
+        # the per-event fallback above translates inside insert_edge /
+        # delete_edge; the chunked path translates here, once, before
+        # the stream is simulated against the (internal-id) edge set
+        events = [(op, self.order.to_internal(a), self.order.to_internal(b))
+                  for op, a, b in events]
         self._validate_events(events)
         hyb = (self._updater.hyb_spc_batch if self._updater is not None
                else hyb_spc_batch)
@@ -457,7 +503,7 @@ class DynamicSPC:
         return 8 * self.index_entries()
 
     def state_dict(self) -> dict:
-        return {
+        state = {
             "graph.src": self.graph.src, "graph.dst": self.graph.dst,
             "graph.m2": self.graph.m2,
             "index.hub": self.index.hub, "index.dist": self.index.dist,
@@ -465,6 +511,12 @@ class DynamicSPC:
             "index.cnt_sum": self.index.cnt_sum,
             "version": jnp.int64(self.version),
         }
+        if not self.order.identity:
+            # the external->rank permutation travels with the state; the
+            # default "id" order keeps the seed's 9-leaf schema verbatim
+            state["order.vertex_of"] = jnp.asarray(self.order.vertex_of,
+                                                   jnp.int32)
+        return state
 
     @staticmethod
     def _validate_state(n: int, state: dict) -> dict:
@@ -514,6 +566,8 @@ class DynamicSPC:
         want("index.size", (n + 1,))
         if "index.cnt_sum" in host:
             want("index.cnt_sum", (n + 1,))
+        if "order.vertex_of" in host:
+            want("order.vertex_of", (n,))
         if "version" in host:
             want("version", ())
             if int(host["version"]) < 0:
@@ -523,7 +577,8 @@ class DynamicSPC:
 
     @classmethod
     def from_state_dict(cls, n: int, state: dict, *,
-                        mesh=None, edge_axis: str = "model") -> "DynamicSPC":
+                        mesh=None, edge_axis: str = "model",
+                        construct_batch: int | None = None) -> "DynamicSPC":
         host = cls._validate_state(n, state)
         obj = cls.__new__(cls)
         obj.stats = UpdateStats()
@@ -531,6 +586,9 @@ class DynamicSPC:
         obj._updater = None
         obj._store = None
         obj.version = int(host.get("version", 0))
+        obj._construct_batch = construct_batch
+        obj.order = (ordering_from_state(host["order.vertex_of"])
+                     if "order.vertex_of" in host else identity_ordering(n))
         if mesh is not None:
             from repro.core.distributed import make_distributed_updater
             obj._updater = make_distributed_updater(mesh, edge_axis)
@@ -563,12 +621,13 @@ class DynamicSPC:
         """
         from repro.train import checkpoint as C
         man = C.manifest(path, step)
-        new = sorted(("graph.src", "graph.dst", "graph.m2", "index.hub",
-                      "index.dist", "index.cnt", "index.size",
-                      "index.cnt_sum", "version"))
+        ordered = sorted(("graph.src", "graph.dst", "graph.m2", "index.hub",
+                          "index.dist", "index.cnt", "index.size",
+                          "index.cnt_sum", "order.vertex_of", "version"))
+        new = sorted(k for k in ordered if k != "order.vertex_of")
         legacy = sorted(k for k in new
                         if k not in ("index.cnt_sum", "version"))
-        for keys in (new, legacy):
+        for keys in (ordered, new, legacy):
             if len(keys) == len(man["shapes"]):
                 break
         else:

@@ -153,6 +153,46 @@ def bulk_append(idx: SPCIndex, h, d_new, c_new, mask) -> SPCIndex:
         overflow=idx.overflow + jnp.sum(lost, dtype=jnp.int32))
 
 
+def bulk_append_batch(idx: SPCIndex, h0, d_new, c_new, mask) -> SPCIndex:
+    """Append one whole hub batch's labels in a single masked scatter.
+
+    ``d_new`` / ``c_new`` / ``mask`` carry a leading hub-batch axis
+    [B, n + 1]; lane ``b`` holds the BFS result of hub ``h0 + b``.  For
+    every row v the labels of kept lanes land at columns
+    ``size[v] + rank-within-row`` in ascending lane order -- exactly the
+    state B sequential :func:`bulk_append` calls in ascending hub order
+    would produce, including the overflow accounting: column offsets
+    only grow along the lane axis, so the lanes that fit are precisely
+    the first ``l_cap - size[v]`` kept ones, and everything later in
+    the row is counted lost (grow & retry, as ever).  ``cnt_sum`` is
+    maintained incrementally from the same fit mask.
+
+    Only valid during construction where batches arrive in ascending
+    hub-id order (append keeps rows sorted); hub ids ``h0 + b >= n``
+    (inactive tail lanes) must arrive fully unmasked.
+    """
+    b = mask.shape[0]
+    rank = jnp.cumsum(mask.astype(jnp.int32), axis=0) - 1   # [B, n+1]
+    col = idx.size[None, :] + jnp.where(mask, rank, 0)
+    fits = mask & (col < idx.l_cap)
+    lost = mask & ~fits
+    rows = jnp.broadcast_to(jnp.arange(idx.n + 1)[None, :], mask.shape)
+    # non-fitting lanes scatter to column l_cap: out of bounds, dropped
+    cols = jnp.where(fits, col, idx.l_cap)
+    hubs = jnp.broadcast_to(
+        jnp.asarray(h0, jnp.int32) + jnp.arange(b, dtype=jnp.int32)[:, None],
+        mask.shape)
+    c64 = c_new.astype(jnp.int64)
+    hub = idx.hub.at[rows, cols].set(hubs, mode="drop")
+    dist = idx.dist.at[rows, cols].set(d_new.astype(jnp.int32), mode="drop")
+    cnt = idx.cnt.at[rows, cols].set(c64, mode="drop")
+    size = idx.size + jnp.sum(fits, axis=0, dtype=jnp.int32)
+    cnt_sum = idx.cnt_sum + jnp.sum(jnp.where(fits, c64, 0), axis=0)
+    return dataclasses.replace(
+        idx, hub=hub, dist=dist, cnt=cnt, size=size, cnt_sum=cnt_sum,
+        overflow=idx.overflow + jnp.sum(lost, dtype=jnp.int32))
+
+
 def bulk_upsert(idx: SPCIndex, h, d_new, c_new, mask) -> SPCIndex:
     """Replace-or-sorted-insert label (h, d_new[v], c_new[v]) where mask[v].
 

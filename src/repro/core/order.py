@@ -1,0 +1,182 @@
+"""Vertex-ordering strategies for index construction (the PSPC knob).
+
+The repo's core invariant is *rank == vertex id* (id 0 is the highest
+ranked vertex; every rank test in BFS pruning and the update engines is
+an integer comparison on ids).  Hub-labeling quality, however, depends
+on WHICH total order the ids encode: processing high-degree vertices
+first shrinks labels dramatically on power-law graphs (PSPC's
+degree/betweenness orderings).  Rather than threading a rank array
+through every engine, an :class:`Ordering` is applied **once, at the id
+boundary**: external (caller) ids are permuted into rank space before
+the graph is built, every engine keeps the id==rank invariant
+untouched, and the driver (``repro.core.dynamic.DynamicSPC``) translates
+ids at its host-side entry points.
+
+Determinism contract: orderings are pure functions of the (n, edges)
+multiset -- degree ties break by ascending external id via a *stable*
+sort -- so two builds of the same graph produce byte-identical state
+dicts (the permutation rides the state dict as ``order.vertex_of``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import numpy as np
+
+#: Supported ordering strategy names.
+ORDERS = ("id", "degree")
+
+
+@dataclasses.dataclass(frozen=True)
+class Ordering:
+    """A vertex permutation between external ids and rank space.
+
+    ``rank_of[ext] == internal`` and ``vertex_of[internal] == ext``;
+    both are host numpy int32 arrays of length n.  ``identity`` is a
+    fast-path flag: the default "id" order translates nothing.
+    """
+
+    rank_of: np.ndarray
+    vertex_of: np.ndarray
+    order: str
+
+    @property
+    def n(self) -> int:
+        return int(self.rank_of.shape[0])
+
+    @property
+    def identity(self) -> bool:
+        return self.order == "id"
+
+    def to_internal(self, v):
+        """External id(s) -> rank-space id(s).
+
+        Bounds are validated host-side first (out-of-range ids would
+        otherwise index-error here with a message naming the *internal*
+        array instead of the caller's id)."""
+        if self.identity:
+            return v
+        arr = np.asarray(v)
+        if arr.size and (arr.min() < 0 or arr.max() >= self.n):
+            bad = arr[(arr < 0) | (arr >= self.n)].flat[0]
+            raise ValueError(
+                f"vertex id {int(bad)} out of range [0, {self.n})")
+        out = self.rank_of[arr]
+        return int(out) if np.isscalar(v) or np.ndim(v) == 0 else out
+
+    def to_external(self, v):
+        """Rank-space id(s) -> external id(s) (inverse translation)."""
+        if self.identity:
+            return v
+        arr = np.asarray(v)
+        out = self.vertex_of[arr]
+        return int(out) if np.isscalar(v) or np.ndim(v) == 0 else out
+
+    def edges_to_internal(self, edges) -> list:
+        if self.identity:
+            return list(edges)
+        return [(int(self.rank_of[a]), int(self.rank_of[b]))
+                for a, b in edges]
+
+    def grow(self, count: int) -> "Ordering":
+        """Append ``count`` fresh vertices at the lowest ranks (new
+        external ids map to themselves -- a fresh vertex has degree 0,
+        the rank any degree ordering would assign it)."""
+        fresh = np.arange(self.n, self.n + count, dtype=np.int32)
+        return Ordering(rank_of=np.concatenate([self.rank_of, fresh]),
+                        vertex_of=np.concatenate([self.vertex_of, fresh]),
+                        order=self.order)
+
+
+def identity_ordering(n: int) -> Ordering:
+    ids = np.arange(n, dtype=np.int32)
+    return Ordering(rank_of=ids, vertex_of=ids, order="id")
+
+
+def vertex_ordering(n: int, edges: Sequence[Tuple[int, int]],
+                    order: str = "id") -> Ordering:
+    """Build the deterministic :class:`Ordering` for an edge list.
+
+    ``"id"``      -- identity (the seed behavior; rank == caller id).
+    ``"degree"``  -- descending degree, ties broken by ascending
+                     external id via a stable sort (two builds of the
+                     same graph are byte-identical).
+    """
+    if order not in ORDERS:
+        raise ValueError(f"unknown vertex order {order!r}; want one of "
+                         f"{ORDERS}")
+    if order == "id":
+        return identity_ordering(n)
+    deg = np.zeros(n, dtype=np.int64)
+    for a, b in edges:
+        deg[a] += 1
+        deg[b] += 1
+    # stable sort on -degree: equal degrees keep ascending-id order
+    vertex_of = np.argsort(-deg, kind="stable").astype(np.int32)
+    rank_of = np.empty(n, dtype=np.int32)
+    rank_of[vertex_of] = np.arange(n, dtype=np.int32)
+    return Ordering(rank_of=rank_of, vertex_of=vertex_of, order=order)
+
+
+def graph_ordering(g, order: str = "id") -> Ordering:
+    """The deterministic :class:`Ordering` of an already-built
+    ``repro.core.graph.Graph`` (degrees read off the doubled edge list;
+    out-degree == undirected degree).  Pure function of the graph, so
+    callers of ``build_index_batched(order="degree")`` can recover the
+    permutation without it being threaded through the return value.
+    """
+    if order not in ORDERS:
+        raise ValueError(f"unknown vertex order {order!r}; want one of "
+                         f"{ORDERS}")
+    if order == "id":
+        return identity_ordering(g.n)
+    from repro.core.graph import degrees
+
+    deg = np.asarray(degrees(g))[: g.n].astype(np.int64)
+    vertex_of = np.argsort(-deg, kind="stable").astype(np.int32)
+    rank_of = np.empty(g.n, dtype=np.int32)
+    rank_of[vertex_of] = np.arange(g.n, dtype=np.int32)
+    return Ordering(rank_of=rank_of, vertex_of=vertex_of, order=order)
+
+
+def relabel_graph(g, ordering: Ordering):
+    """Permute a ``Graph``'s vertex ids into rank space.
+
+    Edge *slots* keep their positions (relaxation is a segment-sum --
+    slot order never affects results); only the ids stored in them are
+    mapped.  The dump row ``n`` maps to itself so tombstones and
+    padding stay inert.
+    """
+    if ordering.identity:
+        return g
+    import dataclasses as _dc
+
+    import jax.numpy as jnp
+
+    rank_ext = jnp.concatenate([
+        jnp.asarray(ordering.rank_of, jnp.int32),
+        jnp.asarray([g.n], jnp.int32),   # dump row -> dump row
+    ])
+    return _dc.replace(g, src=rank_ext[g.src], dst=rank_ext[g.dst])
+
+
+def ordering_from_state(vertex_of: np.ndarray, order: str = "degree"
+                        ) -> Ordering:
+    """Rebuild an :class:`Ordering` from its state-dict leaf.
+
+    Validates that ``vertex_of`` is a permutation of [0, n) -- a
+    corrupted leaf would silently translate queries to wrong vertices.
+    """
+    vertex_of = np.asarray(vertex_of, dtype=np.int32)
+    n = vertex_of.shape[0]
+    if not np.array_equal(np.sort(vertex_of), np.arange(n, dtype=np.int32)):
+        raise ValueError(
+            "state['order.vertex_of'] is not a permutation of "
+            f"[0, {n})")
+    rank_of = np.empty(n, dtype=np.int32)
+    rank_of[vertex_of] = np.arange(n, dtype=np.int32)
+    if np.array_equal(vertex_of, np.arange(n, dtype=np.int32)):
+        return identity_ordering(n)
+    return Ordering(rank_of=rank_of, vertex_of=vertex_of, order=order)

@@ -183,8 +183,10 @@ class SPCService:
     def __init__(self, n: int | None = None,
                  edges: Sequence[Tuple[int, int]] = (), *,
                  spc: DynamicSPC | None = None,
-                 l_cap: int = 32, cap_e: int | None = None,
+                 l_cap: int | None = 32, cap_e: int | None = None,
                  mesh=None, edge_axis: str = "model",
+                 construct_batch: int | None = None,
+                 vertex_order: str = "id",
                  serve_mesh=None, batch_axes: Tuple[str, ...] = ("data",),
                  route: RoutePolicy | str | None = None,
                  replicas: int = 1, queue_size: int = 8,
@@ -197,7 +199,9 @@ class SPCService:
             if n is None:
                 raise ValueError("pass n (+ edges) or a prebuilt spc=")
             spc = DynamicSPC(n, edges, l_cap, cap_e,
-                             mesh=mesh, edge_axis=edge_axis)
+                             mesh=mesh, edge_axis=edge_axis,
+                             construct_batch=construct_batch,
+                             vertex_order=vertex_order)
         if not isinstance(replicas, int) or replicas < 1:
             raise ValueError(f"replicas must be >= 1, got {replicas!r}")
         if not isinstance(queue_size, int) or queue_size < 1:
@@ -600,8 +604,16 @@ class SPCService:
             sharded = None
         engine_route = policy.engine_route
 
+        order = self._spc.order
+
         def serve(s, t):
             self._check_failure()
+            # snapshots live in rank space when the driver was built
+            # with vertex_order != "id": translate caller ids once per
+            # batch (identity order: exact pass-through, zero change)
+            if not order.identity:
+                s = order.to_internal(s)
+                t = order.to_internal(t)
             if at_version is not None:
                 # NB: version 0 (the seed snapshot) is a real published
                 # version -- None-check, don't falsy-check
@@ -742,6 +754,8 @@ class SPCService:
             queue_size=getattr(config, "queue_size", 8),
             replicas=getattr(config, "replicas", 1),
             route=getattr(config, "route", None),
+            construct_batch=getattr(config, "construct_batch", None),
+            vertex_order=getattr(config, "vertex_order", "id"),
         )
         kwargs.update(overrides)
         return cls(config.n, edges, mesh=mesh, serve_mesh=serve_mesh,
