@@ -868,3 +868,96 @@ def construct_table(sizes=((1000, 3000), (10000, 30000)), hub_batch=32,
         })
     _print_rows("construct_batched", rows)
     return rows
+
+
+# -------------------------------------------------------------------------
+def fleet_table(n=300, m=800, n_events=24, update_batch=8,
+                query_batch=128, poll_intervals=(0.005, 0.05, 0.2),
+                seed=12) -> List[Dict]:
+    """(beyond-paper) staleness vs qps on a puller-fed replica.
+
+    One updater ``SPCService`` publishes every committed version over a
+    ``DirTransport`` publication directory; a ``role="replica"`` service
+    pulls it at each ``poll_interval_s`` and serves pinned batches the
+    whole time the stream is in flight.  Per row: replica qps over the
+    ingest window, the staleness the poll interval buys (how many
+    versions the batch's pinned snapshot trailed the updater's current
+    one, sampled per served batch), and the end-state differential --
+    once both sides drain, the replica must answer a fixed query batch
+    IDENTICALLY to the updater (``identical_counts``, the fleet
+    acceptance gate)."""
+    import tempfile
+    import threading
+
+    from repro.serve import SPCService
+
+    edges = random_graph_edges(n, m, seed=seed)
+    events = graph_stream(edges, n, 3 * n_events // 4,
+                          n_events - 3 * n_events // 4, seed=seed)
+    # shared compile caches: one throwaway driver pays the update and
+    # serve compiles so no timed row does
+    warm = DynamicSPC(n, edges, l_cap=32)
+    warm.apply_events(events, batch_size=update_batch)
+    rng = np.random.default_rng(seed)
+    probe_s = rng.integers(0, n, 256)
+    probe_t = rng.integers(0, n, 256)
+
+    rows = []
+    for poll in poll_intervals:
+        with tempfile.TemporaryDirectory(prefix="fleet_bench_") as pub:
+            updater = SPCService(n, edges, l_cap=32,
+                                 update_batch=update_batch,
+                                 transport="dir", publish_dir=pub)
+            replica = SPCService(role="replica", transport="dir",
+                                 publish_dir=pub, poll_interval_s=poll)
+            with updater, replica:
+                serve = replica.reader()
+                serve(np.zeros(query_batch, np.int32),
+                      np.zeros(query_batch, np.int32))  # warm
+                staleness = []
+                served = 0
+
+                def writer():
+                    for lo in range(0, len(events), update_batch):
+                        updater.submit(events[lo:lo + update_batch])
+                    updater.drain()
+
+                th = threading.Thread(target=writer)
+                t0 = _timer()
+                th.start()
+                while th.is_alive() or \
+                        replica.version < updater.version:
+                    s = rng.integers(0, n, query_batch)
+                    d, _ = serve(s, rng.integers(0, n, query_batch))
+                    d.block_until_ready()
+                    served += query_batch
+                    staleness.append(
+                        updater.version - serve.last_version)
+                elapsed = _timer() - t0
+                th.join()
+                replica.drain()
+                # end-state differential: same probes, both ends
+                du, cu = updater.query_batch(probe_s, probe_t)
+                dr, cr = replica.query_batch(probe_s, probe_t)
+                identical = bool(
+                    np.array_equal(np.asarray(du), np.asarray(dr))
+                    and np.array_equal(np.asarray(cu), np.asarray(cr)))
+                st = replica.stats()["replica"]
+                rows.append({
+                    "poll_interval_s": poll,
+                    "events": len(events),
+                    "versions_published": int(updater.version),
+                    "pulls": st["pulls"],
+                    "pull_errors": st["errors"],
+                    "queries_served": served,
+                    "elapsed_s": round(elapsed, 4),
+                    "qps": round(served / max(elapsed, 1e-9), 1),
+                    "mean_staleness_versions": round(
+                        float(np.mean(staleness)), 2) if staleness
+                    else 0.0,
+                    "max_staleness_versions": int(max(staleness))
+                    if staleness else 0,
+                    "identical_counts": identical,
+                })
+    _print_rows("fleet_staleness_vs_qps", rows)
+    return rows

@@ -21,7 +21,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table4,figure7,figure8_9,figure10,"
                          "figure11,table5,hybrid,serving,dist_update,"
-                         "publish,service,frontdoor,construct,kernels")
+                         "publish,service,frontdoor,construct,fleet,"
+                         "kernels")
     args = ap.parse_args()
 
     wanted = set(args.only.split(",")) if args.only else None
@@ -81,6 +82,9 @@ def main() -> None:
                             queries_per_reader=80, reps=2)
         construct_rows = go("construct", P.construct_table,
                             sizes=((400, 1200), (1000, 3000)), hub_batch=32)
+        fleet_rows = go("fleet", P.fleet_table, n=120, m=300,
+                        n_events=12, update_batch=4, query_batch=64,
+                        poll_intervals=(0.01, 0.1))
     else:
         go("table4", P.table4)
         go("figure7", P.figure7)
@@ -95,6 +99,7 @@ def main() -> None:
         service_rows = go("service", P.service_table)
         frontdoor_rows = go("frontdoor", P.frontdoor_table)
         construct_rows = go("construct", P.construct_table)
+        fleet_rows = go("fleet", P.fleet_table)
     root = pathlib.Path(__file__).resolve().parent.parent
     if hybrid_rows is not None:
         out = root / "BENCH_hybrid.json"
@@ -123,6 +128,10 @@ def main() -> None:
     if construct_rows is not None:
         out = root / "BENCH_construct.json"
         out.write_text(json.dumps(construct_rows, indent=2) + "\n")
+        print(f"wrote {out}")
+    if fleet_rows is not None:
+        out = root / "BENCH_fleet.json"
+        out.write_text(json.dumps(fleet_rows, indent=2) + "\n")
         print(f"wrote {out}")
     go("kernels", lambda: (kernels_bench.query_kernel_vs_jnp(),
                            kernels_bench.segment_matmul_vs_segment_sum()))

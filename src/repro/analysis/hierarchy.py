@@ -29,8 +29,18 @@ Why this order (outermost first):
    public probe (``applied``, ``pending``, ``raise_if_failed``) can be
    called under the locks above it.
 5. ``session.lock`` -- one session's last-submitted ticket.
-6. ``store.lock`` -- the snapshot store's front-pointer swap.
-7. ``update_stats.lock`` / ``serve_stats.lock`` -- leaf counter locks;
+6. ``replica.lock`` -- a ``ReplicaGroup`` puller's bookkeeping (pull
+   counters, last error, observed remote version).  Above
+   ``store.lock`` because a puller's bookkeeping may wrap a local-store
+   probe; the puller NEVER holds it across ``store.publish`` (staging
+   asserts no locks held across the JAX dispatch).
+7. ``store.lock`` -- the snapshot store's front-pointer swap.
+8. ``transport.cond`` -- a ``SnapshotTransport``'s process-local state
+   (LocalTransport's published slot + notify, the socket transport's
+   subscriber list).  Below ``store.lock``: ``SnapshotStore.publish``
+   forwards to the transport only AFTER releasing the swap lock, and
+   pullers fetch before (never while) publishing locally.
+9. ``update_stats.lock`` / ``serve_stats.lock`` -- leaf counter locks;
    never held across any other acquisition (or a JAX dispatch).
 
 A nested acquisition that moves *up* this table, or of a lock not in
@@ -56,8 +66,14 @@ HIERARCHY = (
      "ticket->version map"),
     ("session.lock",
      "Session._lock: per-session last submit ticket"),
+    ("replica.lock",
+     "ReplicaGroup._lock: puller counters, last error, observed "
+     "remote version (never held across store.publish)"),
     ("store.lock",
      "SnapshotStore._lock: front snapshot pointer + publish count"),
+    ("transport.cond",
+     "transport._cond: LocalTransport published slot + notify, socket "
+     "transport subscriber list"),
     ("update_stats.lock",
      "core.dynamic.UpdateStats._lock: updater counters (leaf)"),
     ("serve_stats.lock",
@@ -74,6 +90,7 @@ REENTRANT = frozenset({
     "frontdoor.cond",
     "service.reader_lock",
     "service.cond",
+    "transport.cond",
 })
 
 

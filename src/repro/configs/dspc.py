@@ -29,6 +29,12 @@ class DSPCArchConfig:
     queue_size: int = 8       # bounded ingest queue (backpressure point)
     replicas: int = 2         # QueryEngine replicas readers round-robin
     route: str = "auto"       # default RoutePolicy kind for readers
+    # -- fleet knobs (repro.serve.transport / repro.serve.replica) ------
+    role: str = "updater"       # "updater" publishes | "replica" pulls
+    transport: str | None = None  # "local" | "dir" | "socket" (None:
+    # local for updaters; replicas must name a shared medium)
+    publish_dir: str | None = None  # the shared publication directory
+    poll_interval_s: float = 0.05   # replica staleness bound (polling)
     # -- FrontDoor knobs (repro.serve.frontdoor) ------------------------
     max_live_batches: int = 4   # admission bound, in coalesced batches
     dispatchers: int = 2        # coalescing dispatcher threads

@@ -27,8 +27,17 @@ single routed, bucket-padded, compile-cached entry point; see
 
 ``SnapshotStore`` (``repro.serve.publish``) is the update -> serve
 coordination layer: double-buffered, version-counted index snapshots
-that the updater publishes and serving replicas pin per batch, with an
-optional publish -> checkpoint durability hook.
+that the updater publishes and serving replicas pin per batch.  The
+*medium* those snapshots travel over is a pluggable
+``SnapshotTransport`` (``repro.serve.transport``): in-process
+(``LocalTransport``), a committed checkpoint directory
+(``DirTransport``, which doubles as durability), or a low-latency
+socket doorbell (``SocketTransport``).  ``ReplicaGroup``
+(``repro.serve.replica``) is the remote end -- puller threads that
+follow a transport, verify each version, and swap it into a local
+store -- and ``SPCService(role="replica", ...)`` wraps it behind the
+same read path the updater host serves (``submit`` there raises the
+typed ``ReplicaReadOnlyError``).
 
 Hand-wiring these (``DynamicSPC.attach_store`` + your own updater
 thread + ``QueryEngine.serve_from``) is the *legacy* consumption path;
@@ -42,15 +51,25 @@ from repro.serve.frontdoor import (DeadlineExceeded, FrontDoor,
                                    FrontDoorError, FrontDoorSession,
                                    Overloaded)
 from repro.serve.publish import Snapshot, SnapshotStore, load_snapshot
+from repro.serve.replica import ReplicaGroup
 from repro.serve.routing import RoutePolicy
-from repro.serve.service import (CONSISTENCY_LEVELS, NO_TICKET, Session,
+from repro.serve.service import (CONSISTENCY_LEVELS, NO_TICKET, ROLES,
+                                 ReplicaReadOnlyError, Session,
                                  SPCService, UpdaterError)
+from repro.serve.transport import (TRANSPORTS, DirTransport,
+                                   LocalTransport, PublisherBehindError,
+                                   SnapshotTransport, SocketTransport,
+                                   TransportError, make_transport)
 
 __all__ = ["SPCService", "Session", "NO_TICKET", "RoutePolicy",
            "UpdaterError", "CONSISTENCY_LEVELS",
+           "ROLES", "ReplicaReadOnlyError", "ReplicaGroup",
            "FrontDoor", "FrontDoorSession", "FrontDoorError",
            "Overloaded", "DeadlineExceeded",
            "QueryEngine", "ServeStats", "ServeStatsView",
            "DEFAULT_BUCKETS", "bucket_size",
            "coalesce_pairs", "split_rows",
-           "Snapshot", "SnapshotStore", "load_snapshot"]
+           "Snapshot", "SnapshotStore", "load_snapshot",
+           "SnapshotTransport", "LocalTransport", "DirTransport",
+           "SocketTransport", "TransportError", "PublisherBehindError",
+           "TRANSPORTS", "make_transport"]

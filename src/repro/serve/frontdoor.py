@@ -313,7 +313,7 @@ class FrontDoor:
                 f"belong on SPCService.reader / query_batch directly")
         # per-request host-side id validation: a bad id fails THIS
         # caller synchronously instead of poisoning a coalesced batch
-        QueryEngine._validate_ids(self.service.spc.n, s, t)
+        QueryEngine._validate_ids(self.service.n, s, t)
         timeout = self.deadline_s if deadline is None else float(deadline)
         req = _Request(s, t, min_ticket, time.monotonic() + timeout)
         with self._cond:

@@ -30,12 +30,17 @@ version-counted snapshot store between the updater and the replicas:
   lookup on the *published* index -- every replica pinned on version k
   routes from k's bound, consistent mid-refresh.
 
-* **Published == durable (optional).**  With ``checkpoint_dir=`` every
-  committed version is also checkpointed through
-  ``repro.train.checkpoint``'s tmp + ``os.replace`` protocol (optionally
-  on the async saver thread), so a crashed updater restarts from the
-  last *published* version -- :func:`load_snapshot` restores it without
-  knowing shapes up front.
+* **The medium is pluggable.**  This store only *versions* snapshots;
+  *moving* them between processes/hosts is a
+  ``repro.serve.transport.SnapshotTransport`` -- ``LocalTransport``
+  (in-process, the default), ``DirTransport`` (committed ``step_*``
+  dirs + ``LATEST``, which also makes every published version durable
+  through the atomic checkpoint protocol), or the socket-notify
+  transport.  Every committed swap is forwarded to the transport;
+  remote ``ReplicaGroup`` pullers (``repro.serve.replica``) follow the
+  medium, verify, and swap into their own local store.  The legacy
+  ``checkpoint_dir=`` / ``async_checkpoint=`` kwargs are a shim that
+  builds the equivalent ``DirTransport``.
 
 Producer side: ``DynamicSPC.attach_store()`` publishes after every
 committed mutation / event chunk -- and only committed ones, so an
@@ -52,47 +57,17 @@ label structure should carry the metadata queries need (arXiv:2102.08529).
 
 from __future__ import annotations
 
-import dataclasses
-import threading
 from typing import Optional
-
-import jax.numpy as jnp
-import numpy as np
 
 from repro.analysis.shadow import assert_no_locks_held, make_lock
 from repro.core.labels import SPCIndex
-from repro.train import checkpoint as C
+# Snapshot/load_snapshot moved to repro.serve.transport with the
+# publication-medium split; re-exported here for compatibility.
+from repro.serve.transport import (DirTransport, LocalTransport,  # noqa: F401
+                                   Snapshot, SnapshotTransport,
+                                   load_snapshot, snapshot_tree)
 
-
-@dataclasses.dataclass(frozen=True)
-class Snapshot:
-    """One immutable published (version, index) pair.
-
-    Holding a ``Snapshot`` IS the pin: the store never mutates published
-    objects, so a batch evaluated against ``snap.index`` is unaffected
-    by any number of concurrent publishes.
-    """
-
-    version: int
-    index: SPCIndex
-
-
-def _snapshot_tree(snap: Snapshot) -> dict:
-    """Flat host-array dict of a snapshot (checkpoint payload).
-
-    Dict pytrees flatten in sorted-key order, which is what lets
-    :func:`load_snapshot` rebuild a ``tree_like`` from the manifest's
-    positional shapes/dtypes.
-    """
-    idx = snap.index
-    return {
-        "index.hub": np.asarray(idx.hub),
-        "index.dist": np.asarray(idx.dist),
-        "index.cnt": np.asarray(idx.cnt),
-        "index.size": np.asarray(idx.size),
-        "index.cnt_sum": np.asarray(idx.cnt_sum),
-        "version": np.int64(snap.version),
-    }
+_snapshot_tree = snapshot_tree  # legacy private alias
 
 
 class SnapshotStore:
@@ -104,26 +79,33 @@ class SnapshotStore:
     :meth:`publish` stages outside the lock and swaps inside it.
 
     ``mesh=`` places every staged snapshot replicated over the mesh
-    before the swap (serving-replica layout); ``checkpoint_dir=`` makes
-    every published version durable through the atomic checkpoint
-    protocol, with ``async_checkpoint=True`` moving serialization off
-    the publish path.
+    before the swap (serving-replica layout).  ``transport=`` plugs the
+    publication medium every committed swap is forwarded through
+    (default ``LocalTransport``: in-process only); the legacy
+    ``checkpoint_dir=`` / ``async_checkpoint=`` / ``keep=`` kwargs
+    build the equivalent ``DirTransport``.
     """
 
     def __init__(self, index: SPCIndex | None = None, *, version: int = 0,
-                 mesh=None, checkpoint_dir: str | None = None,
+                 mesh=None, transport: SnapshotTransport | None = None,
+                 checkpoint_dir: str | None = None,
                  async_checkpoint: bool = False, keep: int = 3) -> None:
+        if transport is not None and checkpoint_dir is not None:
+            raise ValueError(
+                "pass transport= OR the legacy checkpoint_dir= shim, "
+                "not both")
+        if transport is None:
+            transport = (DirTransport(checkpoint_dir, keep=keep,
+                                      async_save=async_checkpoint)
+                         if checkpoint_dir is not None else LocalTransport())
         self._lock = make_lock("store.lock")
         self._mesh = mesh
-        self._ckpt_dir = checkpoint_dir
-        self._saver = C.AsyncSaver() if async_checkpoint else None
-        self._keep = keep
+        self._transport = transport
         self._front: Optional[Snapshot] = None
         self.publishes = 0  # swap count (excludes the seed snapshot)
         if index is not None:
             self._front = Snapshot(int(version), self._stage(index))
-            if self._ckpt_dir is not None:
-                self._checkpoint(self._front)
+            self._transport.publish(self._front)
 
     # -- reader side --------------------------------------------------------
     @property
@@ -131,6 +113,11 @@ class SnapshotStore:
         """Version of the front snapshot (None while empty)."""
         snap = self._front  # analysis: ignore[unlocked-attr]
         return None if snap is None else snap.version
+
+    @property
+    def transport(self) -> SnapshotTransport:
+        """The publication medium committed swaps are forwarded to."""
+        return self._transport
 
     def current(self) -> Snapshot:
         """Pin the front snapshot: the returned object is immutable and
@@ -154,9 +141,12 @@ class SnapshotStore:
 
     def publish(self, index: SPCIndex, *, version: int | None = None) -> int:
         """Stage ``index`` as the next snapshot and atomically swap it
-        in at ``version`` (default: front version + 1).  Returns the
+        in at ``version`` (default: front version + 1), then forward
+        the committed snapshot through the transport.  Returns the
         published version; raises ``ValueError`` on a non-increasing
-        one (stale publisher)."""
+        one (stale publisher) before anything is swapped or forwarded,
+        and ``transport.PublisherBehindError`` when the *medium* is
+        ahead (a restarted updater trying to re-publish history)."""
         staged = self._stage(index)
         with self._lock:
             prev = -1 if self._front is None else self._front.version
@@ -168,55 +158,16 @@ class SnapshotStore:
             snap = Snapshot(v, staged)
             self._front = snap
             self.publishes += 1
-        if self._ckpt_dir is not None:
-            self._checkpoint(snap)
+        # outside the lock: the medium may serialize/do IO, and readers
+        # pinning the new front must never wait on it
+        self._transport.publish(snap)
         return v
 
-    # -- durability hook ----------------------------------------------------
-    def _checkpoint(self, snap: Snapshot) -> None:
-        tree = _snapshot_tree(snap)
-        meta = {"n": snap.index.n, "l_cap": snap.index.l_cap,
-                "version": snap.version}
-        if self._saver is not None:
-            self._saver.save(self._ckpt_dir, snap.version, tree, meta)
-        else:
-            C.save(self._ckpt_dir, snap.version, tree, meta)
-        # only committed step_* dirs are touched; an in-flight async
-        # write lives in a .tmp dir and is invisible to gc
-        C.gc_old(self._ckpt_dir, keep=self._keep)
-
     def wait(self) -> None:
-        """Drain an in-flight async checkpoint (no-op otherwise)."""
-        if self._saver is not None:
-            self._saver.wait()
+        """Settle an in-flight async transport commit (re-raising its
+        failure; no-op for synchronous media)."""
+        self._transport.wait()
 
-
-def load_snapshot(path: str, step: int | None = None) -> Snapshot:
-    """Restore a published snapshot from a store's checkpoint directory
-    (default: the latest committed version).
-
-    Shapes come from the committed manifest
-    (``repro.train.checkpoint.manifest``), so no ``tree_like`` template
-    is needed; the version counter is restored from the payload itself.
-    """
-    man = C.manifest(path, step)
-    keys = sorted(("index.hub", "index.dist", "index.cnt", "index.size",
-                   "index.cnt_sum", "version"))
-    if len(man["shapes"]) != len(keys):
-        raise ValueError(
-            f"checkpoint at {path} has {len(man['shapes'])} leaves, "
-            f"want {len(keys)} (not a snapshot checkpoint?)")
-    tree_like = {
-        k: np.empty(shape, dtype=np.dtype(dt))
-        for k, shape, dt in zip(keys, man["shapes"], man["dtypes"])
-    }
-    tree, _, meta = C.restore(path, tree_like, step=man["step"])
-    n = int(meta["n"])
-    idx = SPCIndex(
-        hub=jnp.asarray(tree["index.hub"]),
-        dist=jnp.asarray(tree["index.dist"]),
-        cnt=jnp.asarray(tree["index.cnt"]),
-        size=jnp.asarray(tree["index.size"]),
-        cnt_sum=jnp.asarray(tree["index.cnt_sum"]),
-        overflow=jnp.int32(0), n=n)
-    return Snapshot(version=int(tree["version"]), index=idx)
+    def close(self) -> None:
+        """Settle and release the transport (sockets, saver threads)."""
+        self._transport.close()

@@ -63,10 +63,27 @@ split of one writer from replicated hub-label readers:
   ``mesh=`` aware, so launch scripts and tests construct the service
   the same way.
 
+* **Explicit roles (the multi-host fleet).**  ``role="updater"`` (the
+  default) owns the ``DynamicSPC`` driver and publishes every committed
+  version through a pluggable ``SnapshotTransport``
+  (``transport="local"|"dir"|"socket"`` + ``publish_dir=``;
+  ``repro.serve.transport``).  ``role="replica"`` owns NO driver: it
+  builds its ``SnapshotStore`` from a puller-fed
+  ``repro.serve.replica.ReplicaGroup`` that follows the transport,
+  verifies each version, and swaps locally -- ``reader()``,
+  ``query_batch`` and the ``FrontDoor`` work unchanged, every batch
+  pinning the last *pulled* version.  A replica keeps serving through
+  updater crashes and re-attaches to a restarted updater (version
+  monotonicity makes the handoff safe); ``submit`` on a replica raises
+  the typed :class:`ReplicaReadOnlyError` -- writes route to the
+  updater host (which is also what ``read_your_writes`` means there:
+  only a session that wrote *through the updater* has a ticket to wait
+  on; replica-local sessions hold ``NO_TICKET`` and never wait).
+
 Thread contract: any number of submitter and reader threads, one
-internal updater thread.  Tickets are handed out in queue order, so
-``applied`` advances monotonically and read-your-writes waits are
-well-ordered.
+internal updater thread (or, on replicas, one puller thread per source
+transport).  Tickets are handed out in queue order, so ``applied``
+advances monotonically and read-your-writes waits are well-ordered.
 """
 
 from __future__ import annotations
@@ -80,14 +97,20 @@ from typing import Iterable, Sequence, Tuple
 from repro.analysis.shadow import (make_condition, make_lock,
                                    make_rlock)
 from repro.core.dynamic import DEFAULT_BATCH, DynamicSPC
+from repro.core.order import identity_ordering
 from repro.serve.engine import DEFAULT_BUCKETS, QueryEngine
 from repro.serve.publish import SnapshotStore
+from repro.serve.replica import ReplicaGroup
 from repro.serve.routing import RoutePolicy
+from repro.serve.transport import make_transport
 
 _log = logging.getLogger(__name__)
 
 #: Declared read-consistency levels (see module doc).
 CONSISTENCY_LEVELS = ("pinned", "read_your_writes")
+
+#: Declared service roles (see module doc).
+ROLES = ("updater", "replica")
 
 #: The "nothing to wait for" ticket sentinel.  ``submit([])`` returns it
 #: (real tickets start at 1), a fresh :class:`Session` starts on it, and
@@ -101,6 +124,12 @@ NO_TICKET = 0
 class UpdaterError(RuntimeError):
     """The background updater thread died; every subsequent service
     call raises this with the original exception chained (__cause__)."""
+
+
+class ReplicaReadOnlyError(RuntimeError):
+    """``submit`` on a ``role="replica"`` service: replicas serve
+    pulled snapshots and never ingest -- route writes to the updater
+    host (whose published versions this replica will pull)."""
 
 
 class Session:
@@ -175,6 +204,16 @@ class SPCService:
     ``wait_timeout``
         Default bound (seconds) on every blocking wait (drain,
         read-your-writes, at_version); ``TimeoutError`` past it.
+    ``role`` / ``transport`` / ``publish_dir`` / ``poll_interval_s``
+        The fleet knobs (module doc).  An updater publishes through the
+        transport (``"local"`` default; ``"dir"``/``"socket"`` need
+        ``publish_dir=``, or pass a built ``SnapshotTransport``); a
+        replica needs no graph at all -- it pulls every
+        ``poll_interval_s`` and serves the last verified version.
+    ``keep_published``
+        Retention window of the publication directory (always includes
+        the step ``LATEST`` names, so pullers never lose the version
+        they are mid-restore on).
     """
 
     #: Retention window of the ticket -> version map (see class doc).
@@ -192,10 +231,26 @@ class SPCService:
                  replicas: int = 1, queue_size: int = 8,
                  update_batch: int = DEFAULT_BATCH,
                  buckets=DEFAULT_BUCKETS,
+                 role: str = "updater",
+                 transport=None, publish_dir: str | None = None,
+                 poll_interval_s: float = 0.05,
+                 keep_published: int = 3,
                  checkpoint_dir: str | None = None,
                  async_checkpoint: bool = False,
                  wait_timeout: float = 60.0) -> None:
-        if spc is None:
+        if role not in ROLES:
+            raise ValueError(f"unknown role {role!r}; want one of {ROLES}")
+        if role == "replica":
+            if spc is not None or n is not None or edges:
+                raise ValueError(
+                    "role='replica' owns no updater: drop n/edges/spc= "
+                    "and point transport=/publish_dir= at the updater's "
+                    "publication medium")
+            if checkpoint_dir is not None:
+                raise ValueError(
+                    "role='replica' reads through transport=/"
+                    "publish_dir=, not the legacy checkpoint_dir= shim")
+        elif spc is None:
             if n is None:
                 raise ValueError("pass n (+ edges) or a prebuilt spc=")
             spc = DynamicSPC(n, edges, l_cap, cap_e,
@@ -217,10 +272,37 @@ class SPCService:
             raise ValueError(
                 f"route policy {self._policy} needs a serving mesh; "
                 f"pass serve_mesh=")
-        self._spc = spc
-        self._store = spc.attach_store(
-            mesh=serve_mesh, checkpoint_dir=checkpoint_dir,
-            async_checkpoint=async_checkpoint)
+        self.role = role
+        self._spc = spc  # None on replicas: no driver, no ingest
+        self._group: ReplicaGroup | None = None
+        if role == "replica":
+            spec = transport if transport is not None else \
+                ("dir" if publish_dir is not None else None)
+            if spec is None:
+                raise ValueError(
+                    "role='replica' needs a publication medium: pass "
+                    "transport= (a spec or a built SnapshotTransport) "
+                    "and/or publish_dir=")
+            tr = make_transport(spec, publish_dir=publish_dir,
+                                keep=keep_published)
+            self._group = ReplicaGroup(tr, poll_interval_s=poll_interval_s,
+                                       mesh=serve_mesh)
+            self._store = self._group.store
+        else:
+            effective_dir = publish_dir
+            if checkpoint_dir is not None:
+                if publish_dir is not None or transport is not None:
+                    raise ValueError(
+                        "checkpoint_dir= is the legacy spelling of "
+                        "transport='dir' + publish_dir=; pass one or "
+                        "the other, not both")
+                effective_dir = checkpoint_dir
+            spec = transport if transport is not None else \
+                ("dir" if effective_dir is not None else "local")
+            tr = make_transport(spec, publish_dir=effective_dir,
+                                keep=keep_published,
+                                async_save=async_checkpoint)
+            self._store = spc.attach_store(mesh=serve_mesh, transport=tr)
         self._buckets = tuple(buckets)
         self._engines = [QueryEngine(route=self._policy,
                                      buckets=self._buckets)
@@ -259,9 +341,15 @@ class SPCService:
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "SPCService":
-        """Launch the background updater thread (idempotent)."""
+        """Launch the background machinery (idempotent): the updater
+        thread, or -- on a replica -- the puller threads (blocking,
+        bounded by ``wait_timeout``, until the first snapshot is pulled:
+        a started replica is serving-ready)."""
         if self._closed:
             raise RuntimeError("service is closed")
+        if self._group is not None:
+            self._group.start(timeout=self.wait_timeout)
+            return self
         if self._thread is None:
             self._thread = threading.Thread(
                 target=self._run, name="spc-updater", daemon=True)
@@ -285,7 +373,15 @@ class SPCService:
         """Block until every accepted submit is applied AND published
         (then settle any in-flight async checkpoint).  Raises
         ``UpdaterError`` if the updater died mid-queue, ``TimeoutError``
-        past ``timeout`` (default: the service's ``wait_timeout``)."""
+        past ``timeout`` (default: the service's ``wait_timeout``).
+
+        On a replica there is no ingest to drain; this instead catches
+        the local store up to every source's *currently* committed
+        version (bounding staleness before a measurement/teardown)."""
+        if self._group is not None:
+            self._group.catch_up(self.wait_timeout if timeout is None
+                                 else timeout)
+            return
         self._check_failure()
         with self._cond:
             if self._applied < self._accepted and not self._running():
@@ -301,6 +397,12 @@ class SPCService:
         call twice.  Surfaces a pending updater failure."""
         if self._closed:
             self._check_failure()
+            return
+        if self._group is not None:
+            # replica: no ingest to drain, no updater thread to join --
+            # stop the pullers; the store keeps serving the last pull
+            self._closed = True
+            self._group.close()
             return
         if not self._failed() and self._thread is None and self.pending:
             # accepted submits on a never-started service would be
@@ -324,6 +426,9 @@ class SPCService:
         ``strict``) raised instead of silently marking the service
         closed."""
         self._closed = True
+        if self._group is not None:
+            self._group.close()
+            return
         self._stop.set()
         thread = self._thread
         if thread is not None:
@@ -365,6 +470,11 @@ class SPCService:
         a not-yet-started service raises ``RuntimeError`` instead of
         deadlocking.
         """
+        if self._spc is None:
+            raise ReplicaReadOnlyError(
+                "this service is role='replica': it serves pulled "
+                "snapshots and never ingests -- submit to the updater "
+                "host (whose published versions this replica pulls)")
         self._check_failure()
         if self._closed:
             raise RuntimeError("service is closed")
@@ -604,7 +714,11 @@ class SPCService:
             sharded = None
         engine_route = policy.engine_route
 
-        order = self._spc.order
+        # replicas serve id-ordered snapshots: the order leaf does not
+        # travel in the published payload, so a fleet updater must be
+        # built with vertex_order="id" (identity translate == no-op)
+        order = (identity_ordering(0) if self._spc is None
+                 else self._spc.order)
 
         def serve(s, t):
             self._check_failure()
@@ -678,10 +792,30 @@ class SPCService:
 
     # -- introspection / state ----------------------------------------------
     @property
+    def n(self) -> int:
+        """Vertex count of the served graph -- role-agnostic (an
+        updater answers from its driver; a replica from the snapshot it
+        currently serves, so it needs a started, fed group)."""
+        if self._spc is not None:
+            return self._spc.n
+        return self._store.current().index.n
+
+    @property
     def spc(self) -> DynamicSPC:
         """The owned updater driver (escape hatch; mutate through
-        :meth:`submit`, not directly, while the service is running)."""
+        :meth:`submit`, not directly, while the service is running).
+        Raises on a replica -- there is no driver to reach."""
+        if self._spc is None:
+            raise ReplicaReadOnlyError(
+                "role='replica' owns no DynamicSPC driver; the updater "
+                "host holds the mutable state")
         return self._spc
+
+    @property
+    def replica_group(self) -> ReplicaGroup | None:
+        """The puller group feeding this service's store (None on
+        updaters)."""
+        return self._group
 
     @property
     def store(self) -> SnapshotStore:
@@ -702,15 +836,24 @@ class SPCService:
                 "queued_chunks": self._queue.qsize(),
             }
         return {
-            "update": self._spc.stats.snapshot(),
+            "role": self.role,
+            "update": (None if self._spc is None
+                       else self._spc.stats.snapshot()),
             "serve": serve,
             "queries": sum(v.queries for v in serve),
             "version": self._store.version,
             "publishes": self._store.publishes,
             "ingest": queue_state,
+            "replica": (None if self._group is None
+                        else self._group.stats()),
         }
 
     def state_dict(self) -> dict:
+        if self._spc is None:
+            raise ReplicaReadOnlyError(
+                "role='replica' holds no updater state to export; "
+                "checkpoint on the updater host (whose DirTransport "
+                "already makes every published version durable)")
         return self._spc.state_dict()
 
     @classmethod
@@ -745,18 +888,30 @@ class SPCService:
         """
         if config is None:
             from repro.configs.dspc import CONFIG as config
+        kwargs = dict(
+            replicas=getattr(config, "replicas", 1),
+            route=getattr(config, "route", None),
+            role=getattr(config, "role", "updater"),
+            transport=getattr(config, "transport", None),
+            publish_dir=getattr(config, "publish_dir", None),
+            poll_interval_s=getattr(config, "poll_interval_s", 0.05),
+        )
+        kwargs.update(overrides)
+        if kwargs["role"] == "replica":
+            # a replica builds NO graph/driver -- it only pulls; the
+            # updater-side build knobs must not leak into the ctor
+            return cls(serve_mesh=serve_mesh, **kwargs)
         if edges is None:
             from repro.data import random_graph_edges
             edges = random_graph_edges(config.n, config.m, seed=seed)
-        kwargs = dict(
+        kwargs.update(dict(
             l_cap=config.l_cap,
             update_batch=getattr(config, "update_batch", DEFAULT_BATCH),
             queue_size=getattr(config, "queue_size", 8),
-            replicas=getattr(config, "replicas", 1),
-            route=getattr(config, "route", None),
             construct_batch=getattr(config, "construct_batch", None),
             vertex_order=getattr(config, "vertex_order", "id"),
-        )
-        kwargs.update(overrides)
+        ), **{k: v for k, v in overrides.items() if k in (
+            "l_cap", "update_batch", "queue_size", "construct_batch",
+            "vertex_order")})
         return cls(config.n, edges, mesh=mesh, serve_mesh=serve_mesh,
                    **kwargs)

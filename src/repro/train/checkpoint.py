@@ -15,6 +15,20 @@ not blocked (the standard large-cluster pattern).
 
 Arrays are stored *unsharded logical* -- restore reshards onto whatever
 mesh the new job has (elastic restart across different device counts).
+
+Cross-process contract (the serve fleet's ``DirTransport`` rides it):
+
+* Readers racing :func:`gc_old` get a typed :class:`SnapshotGoneError`
+  (never a bare ``FileNotFoundError`` mid-restore) when a ``step_*``
+  dir vanishes between the ``LATEST`` read and the array read -- the
+  caller retries against the new ``LATEST``.
+* The retention window is keyed off ``LATEST``: gc never deletes the
+  step the committed pointer names, so a puller that just read
+  ``LATEST`` always finds that step on disk.
+* A torn/truncated payload (half-written ``arrays.npz`` smuggled past
+  the atomic protocol, a hand-edited dir) raises a typed, step-naming
+  :class:`CheckpointCorruptError` instead of a raw
+  ``KeyError``/``BadZipFile`` from deep inside numpy.
 """
 
 from __future__ import annotations
@@ -23,10 +37,35 @@ import json
 import os
 import shutil
 import threading
+import zipfile
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+class SnapshotGoneError(FileNotFoundError):
+    """A committed ``step_*`` dir vanished under the reader (the
+    gc race): retry against the new ``LATEST``."""
+
+    def __init__(self, path: str, step: int, detail: str = "") -> None:
+        self.path = path
+        self.step = step
+        super().__init__(
+            f"checkpoint step {step} under {path} is gone "
+            f"(garbage-collected between the pointer read and the "
+            f"payload read?){': ' + detail if detail else ''}")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A committed checkpoint's payload is unreadable (truncated
+    archive, missing leaves, unparseable manifest)."""
+
+    def __init__(self, path: str, step: int, detail: str) -> None:
+        self.path = path
+        self.step = step
+        super().__init__(
+            f"checkpoint step {step} under {path} is corrupt: {detail}")
 
 
 def _flatten(tree):
@@ -63,10 +102,25 @@ def save(path: str, step: int, tree: Any, metadata: dict | None = None):
 
 
 class AsyncSaver:
-    """One in-flight async save; joins the previous one before starting."""
+    """One in-flight async save; joins the previous one before starting.
+
+    A background save that fails (disk full, unwritable dir) must not
+    be silently lost -- the caller would keep treating every published
+    version as durable.  The worker captures its exception and the next
+    :meth:`save` / :meth:`wait` re-raises it on the caller thread.
+    """
 
     def __init__(self):
         self._thread: Optional[threading.Thread] = None
+        self._failure: Optional[BaseException] = None
+
+    def _run(self, path, step, tree, metadata):
+        try:
+            save(path, step, tree, metadata)
+        except BaseException as e:
+            # surfaced by the next save()/wait() on the caller thread;
+            # a daemon thread's traceback alone helps nobody
+            self._failure = e
 
     def save(self, path: str, step: int, tree: Any,
              metadata: dict | None = None):
@@ -77,26 +131,44 @@ class AsyncSaver:
         host = [np.asarray(x) for x in leaves]
         host_tree = jax.tree.unflatten(treedef, host)
         self._thread = threading.Thread(
-            target=save, args=(path, step, host_tree, metadata), daemon=True)
+            target=self._run, args=(path, step, host_tree, metadata),
+            daemon=True)
         self._thread.start()
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._failure is not None:
+            failure, self._failure = self._failure, None
+            raise RuntimeError(
+                "background checkpoint save failed; the last announced "
+                "step is NOT durable") from failure
 
 
 def manifest(path: str, step: int | None = None) -> dict:
     """The committed manifest of ``step`` (default: latest): treedef
     string, per-leaf shapes/dtypes, user metadata.  Lets callers that
     only persisted a flat dict (e.g. the snapshot publish hook in
-    ``repro.serve.publish``) rebuild a ``tree_like`` for :func:`restore`
-    without knowing the array shapes up front."""
+    ``repro.serve.transport``) rebuild a ``tree_like`` for
+    :func:`restore` without knowing the array shapes up front.
+
+    Raises :class:`SnapshotGoneError` if the step dir vanished under a
+    concurrent :func:`gc_old`, :class:`CheckpointCorruptError` on an
+    unparseable manifest.
+    """
     step = step if step is not None else latest_step(path)
     if step is None:
         raise FileNotFoundError(f"no committed checkpoint under {path}")
-    with open(os.path.join(path, f"step_{step:09d}", "manifest.json")) as f:
-        return json.load(f)
+    try:
+        with open(os.path.join(path, f"step_{step:09d}",
+                               "manifest.json")) as f:
+            return json.load(f)
+    except FileNotFoundError as e:
+        raise SnapshotGoneError(path, step, "manifest.json missing") from e
+    except json.JSONDecodeError as e:
+        raise CheckpointCorruptError(
+            path, step, f"manifest.json does not parse ({e})") from e
 
 
 def latest_step(path: str) -> int | None:
@@ -110,16 +182,35 @@ def latest_step(path: str) -> int | None:
 def restore(path: str, tree_like: Any, step: int | None = None):
     """Restore into the structure of ``tree_like`` (shapes must match).
 
-    Returns (tree, step, metadata); raises FileNotFoundError if none.
+    Returns (tree, step, metadata); raises FileNotFoundError if the
+    directory holds no committed checkpoint at all,
+    :class:`SnapshotGoneError` if the requested step's dir vanished
+    (the gc race -- retry against the new ``LATEST``), and
+    :class:`CheckpointCorruptError` on a truncated / torn payload.
     """
     step = step if step is not None else latest_step(path)
     if step is None:
         raise FileNotFoundError(f"no committed checkpoint under {path}")
     d = os.path.join(path, f"step_{step:09d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(d, "arrays.npz"))
-    leaves = [data[str(i)] for i in range(len(data.files))]
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except FileNotFoundError as e:
+        raise SnapshotGoneError(path, step, "manifest.json missing") from e
+    except json.JSONDecodeError as e:
+        raise CheckpointCorruptError(
+            path, step, f"manifest.json does not parse ({e})") from e
+    try:
+        data = np.load(os.path.join(d, "arrays.npz"))
+        leaves = [data[str(i)] for i in range(len(data.files))]
+    except FileNotFoundError as e:
+        # manifest read fine but arrays vanished: gc won the race
+        # between the two reads
+        raise SnapshotGoneError(path, step, "arrays.npz missing") from e
+    except (zipfile.BadZipFile, ValueError, KeyError, OSError, EOFError) as e:
+        raise CheckpointCorruptError(
+            path, step, f"arrays.npz unreadable ({type(e).__name__}: {e})"
+        ) from e
     ref_leaves, treedef = _flatten(tree_like)
     if len(ref_leaves) != len(leaves):
         raise ValueError(
@@ -135,11 +226,20 @@ def restore(path: str, tree_like: Any, step: int | None = None):
 
 
 def gc_old(path: str, keep: int = 3):
-    """Delete all but the newest ``keep`` committed checkpoints."""
+    """Delete all but the newest ``keep`` committed checkpoints.
+
+    The retention window is keyed off ``LATEST``: the step the
+    committed pointer names is never deleted, even if newer ``step_*``
+    dirs exist (a publisher mid-commit), so a cross-process reader that
+    just read ``LATEST`` can always restore that step.
+    """
     if not os.path.isdir(path):
         return
     steps = sorted(
         int(d.split("_")[1]) for d in os.listdir(path)
         if d.startswith("step_") and not d.endswith(".tmp"))
-    for s in steps[:-keep]:
+    pinned = latest_step(path)
+    for s in steps[:-keep] if keep > 0 else steps:
+        if s == pinned:
+            continue
         shutil.rmtree(os.path.join(path, f"step_{s:09d}"), ignore_errors=True)

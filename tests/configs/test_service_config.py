@@ -74,3 +74,28 @@ def test_registry_smoke_config_carries_service_knobs():
         assert cfg.queue_size >= 1
         assert cfg.replicas >= 1
         assert cfg.route in ("auto", "merge", "table", "pallas")
+        # fleet knobs (PR 9): default to a single-host local updater
+        assert cfg.role == "updater"
+        assert cfg.transport is None and cfg.publish_dir is None
+        assert cfg.poll_interval_s > 0
+
+
+def test_from_config_builds_fleet_roles(tmp_path):
+    """One config shape builds both ends of the fleet: the updater
+    publishes over the configured dir, the replica pulls it -- and the
+    replica path never builds a graph (no edges needed)."""
+    import dataclasses
+
+    cfg = dataclasses.replace(SMOKE, transport="dir",
+                              publish_dir=str(tmp_path),
+                              poll_interval_s=0.01)
+    with SPCService.from_config(cfg, seed=0) as updater:
+        assert updater.role == "updater"
+        updater.drain()
+        rep_cfg = dataclasses.replace(cfg, role="replica")
+        with SPCService.from_config(rep_cfg) as replica:
+            assert replica.role == "replica"
+            replica.drain()
+            assert replica.version == updater.version
+            d, c = replica.query_batch([0, 1], [2, 3])
+            assert d.shape == (2,)

@@ -1,0 +1,163 @@
+"""Checkpoint protocol hardening: async-save failure surfacing, the
+LATEST-keyed gc retention window, and typed errors for every way a
+committed checkpoint can be missing or corrupt (the cross-process
+contract the serve fleet's ``DirTransport`` pullers rely on)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as C
+
+
+def _tree(k=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return {f"leaf{i}": rng.integers(0, 100, (4,)).astype(np.int64)
+            for i in range(k)}
+
+
+def _step_dir(path, step):
+    return os.path.join(path, f"step_{step:09d}")
+
+
+# -- AsyncSaver failure surfacing -------------------------------------------
+def test_async_saver_reraises_background_failure_on_wait(tmp_path):
+    """A failed background write (unwritable dir) must surface on the
+    next wait() -- not vanish in a daemon thread while the publisher
+    keeps announcing 'durable' versions."""
+    saver = C.AsyncSaver()
+    blocked = tmp_path / "blocked"
+    blocked.write_text("a file, not a directory")  # os.makedirs will fail
+    saver.save(str(blocked), 0, _tree())
+    with pytest.raises(RuntimeError, match="NOT durable"):
+        saver.wait()
+    # the failure is consumed: the saver is reusable afterwards
+    saver.save(str(tmp_path / "ok"), 1, _tree())
+    saver.wait()
+    assert C.latest_step(str(tmp_path / "ok")) == 1
+
+
+def test_async_saver_reraises_background_failure_on_next_save(tmp_path):
+    saver = C.AsyncSaver()
+    blocked = tmp_path / "blocked"
+    blocked.write_text("not a dir")
+    saver.save(str(blocked), 0, _tree())
+    with pytest.raises(RuntimeError, match="NOT durable") as ei:
+        saver.save(str(tmp_path / "ok"), 1, _tree())
+    assert ei.value.__cause__ is not None  # original exception chained
+
+
+# -- gc retention keyed off LATEST ------------------------------------------
+def test_gc_never_deletes_the_latest_step(tmp_path):
+    path = str(tmp_path)
+    for step in range(5):
+        C.save(path, step, _tree(seed=step))
+    # a publisher mid-commit: newer dirs exist but LATEST still names 4;
+    # wind the pointer BACK to simulate the reader-visible commit point
+    with open(os.path.join(path, "LATEST"), "w") as f:
+        f.write("1")
+    C.gc_old(path, keep=2)
+    assert os.path.isdir(_step_dir(path, 1))   # pinned by LATEST
+    assert os.path.isdir(_step_dir(path, 3))   # newest keep=2 window
+    assert os.path.isdir(_step_dir(path, 4))
+    assert not os.path.isdir(_step_dir(path, 0))
+    assert not os.path.isdir(_step_dir(path, 2))
+    tree, step, _ = C.restore(path, _tree(seed=1))  # LATEST restores
+    assert step == 1
+    np.testing.assert_array_equal(tree["leaf0"], _tree(seed=1)["leaf0"])
+
+
+def test_gc_keeps_newest_window(tmp_path):
+    path = str(tmp_path)
+    for step in range(6):
+        C.save(path, step, _tree(seed=step))
+    C.gc_old(path, keep=3)
+    kept = sorted(int(d.split("_")[1]) for d in os.listdir(path)
+                  if d.startswith("step_"))
+    assert kept == [3, 4, 5]
+
+
+# -- typed errors on missing / corrupt checkpoints --------------------------
+def test_stale_latest_pointing_at_gcd_step_is_snapshot_gone(tmp_path):
+    path = str(tmp_path)
+    C.save(path, 0, _tree())
+    C.save(path, 1, _tree(seed=1))
+    # simulate the race: gc removed step 0 but a reader cached step=0
+    import shutil
+    shutil.rmtree(_step_dir(path, 0))
+    with pytest.raises(C.SnapshotGoneError, match="step 0") as ei:
+        C.restore(path, _tree(), step=0)
+    assert ei.value.step == 0
+    with pytest.raises(C.SnapshotGoneError, match="step 0"):
+        C.manifest(path, step=0)
+    # and a LATEST pointer whose own step was gc'd (hand-rolled dirs,
+    # foreign writers) is the same typed error, not a bare
+    # FileNotFoundError from deep inside the payload read
+    with open(os.path.join(path, "LATEST"), "w") as f:
+        f.write("7")
+    with pytest.raises(C.SnapshotGoneError, match="step 7"):
+        C.restore(path, _tree())
+
+
+def test_arrays_vanishing_after_manifest_read_is_snapshot_gone(tmp_path):
+    """gc can win the race BETWEEN the manifest read and the arrays
+    read; model it by deleting only arrays.npz."""
+    path = str(tmp_path)
+    C.save(path, 0, _tree())
+    os.remove(os.path.join(_step_dir(path, 0), "arrays.npz"))
+    with pytest.raises(C.SnapshotGoneError, match="arrays.npz"):
+        C.restore(path, _tree(), step=0)
+
+
+def test_truncated_arrays_is_checkpoint_corrupt(tmp_path):
+    path = str(tmp_path)
+    C.save(path, 0, _tree())
+    npz = os.path.join(_step_dir(path, 0), "arrays.npz")
+    data = open(npz, "rb").read()
+    with open(npz, "wb") as f:
+        f.write(data[: len(data) // 3])  # torn write
+    with pytest.raises(C.CheckpointCorruptError, match="step 0") as ei:
+        C.restore(path, _tree(), step=0)
+    assert "arrays.npz" in str(ei.value)
+
+
+def test_unparseable_manifest_is_checkpoint_corrupt(tmp_path):
+    path = str(tmp_path)
+    C.save(path, 0, _tree())
+    with open(os.path.join(_step_dir(path, 0), "manifest.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(C.CheckpointCorruptError, match="manifest.json"):
+        C.restore(path, _tree(), step=0)
+    with pytest.raises(C.CheckpointCorruptError, match="manifest.json"):
+        C.manifest(path, step=0)
+
+
+def test_empty_dir_is_plain_file_not_found(tmp_path):
+    """No committed checkpoint at all stays the ordinary, catchable
+    FileNotFoundError (SnapshotGoneError is reserved for the race)."""
+    with pytest.raises(FileNotFoundError):
+        C.restore(str(tmp_path), _tree())
+    with pytest.raises(FileNotFoundError):
+        C.manifest(str(tmp_path))
+    assert C.latest_step(str(tmp_path)) is None
+
+
+def test_leaf_count_mismatch_stays_value_error(tmp_path):
+    path = str(tmp_path)
+    C.save(path, 0, _tree(k=2))
+    with pytest.raises(ValueError, match="leaves"):
+        C.restore(path, _tree(k=3))
+
+
+def test_manifest_metadata_round_trip(tmp_path):
+    path = str(tmp_path)
+    C.save(path, 3, _tree(), metadata={"n": 17, "version": 3})
+    man = C.manifest(path)
+    assert man["step"] == 3
+    assert man["metadata"] == {"n": 17, "version": 3}
+    assert len(man["shapes"]) == 3
+    # sanity: the manifest file itself is the committed json
+    with open(os.path.join(_step_dir(path, 3), "manifest.json")) as f:
+        assert json.load(f)["step"] == 3
