@@ -1,31 +1,130 @@
 """Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
 
 Runs one experiment per paper table/figure (Section 4) at CPU scale plus
-the kernel microbenches.  ``--fast`` shrinks sizes further (CI).
+the kernel microbenches.  ``--fast`` shrinks sizes further (CI),
+``--list`` prints the registry, ``--only a,b`` selects a subset.
+
+Every ``benchmarks.paper_tables.*_table`` emitter MUST be registered in
+:data:`TABLES` below (its name, fast/full kwargs and the committed
+``BENCH_*.json`` artifact, if any) -- ``tests/benchmarks`` asserts the
+registry is complete, so a new table can never silently drop out of the
+CI smoke step.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import pathlib
 import subprocess
 import sys
 import time
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSpec:
+    """One registered experiment: ``table`` is the emitter attribute in
+    ``benchmarks.paper_tables``; ``artifact`` the committed JSON (None:
+    print-only); ``fast`` the CI-scale kwargs, ``full`` overrides for
+    the default run (empty: emitter defaults)."""
+    table: str
+    fast: Dict
+    full: Dict = dataclasses.field(default_factory=dict)
+    artifact: Optional[str] = None
+
+
+#: name -> spec, in run order.  ``dist_update`` needs forced host
+#: devices and runs in its own subprocess unless it is the only
+#: selection (see main()).
+TABLES: Dict[str, TableSpec] = {
+    "table4": TableSpec(
+        "table4", fast=dict(sizes=((120, 300), (240, 700)), n_updates=5)),
+    "figure7": TableSpec(
+        "figure7", fast=dict(n=200, m=600, n_updates=8, n_queries=100)),
+    "figure8_9": TableSpec(
+        "figure8_9", fast=dict(n=150, m=400, n_updates=4)),
+    "figure10": TableSpec(
+        "figure10", fast=dict(n=150, m=400, n_insert=8, n_delete=2)),
+    "figure11": TableSpec(
+        "figure11", fast=dict(n=150, m=450, n_each=4)),
+    "table5": TableSpec(
+        "table5", fast=dict(n=150, m=400, n_edges_tested=5)),
+    "hybrid": TableSpec(
+        "hybrid_table",
+        fast=dict(n=120, m=300, n_insert=12, n_delete=4, batch_size=8),
+        artifact="BENCH_hybrid.json"),
+    "serving": TableSpec(
+        "serving_table",
+        fast=dict(n=150, m=400, n_events=8, n_queries=512, batch=128),
+        artifact="BENCH_serving.json"),
+    "dist_update": TableSpec(
+        "dist_update_table",
+        fast=dict(n=100, m=240, n_events=8, batch_size=4),
+        artifact="BENCH_dist_update.json"),
+    "publish": TableSpec(
+        "publish_table",
+        fast=dict(n=120, m=300, n_events=12, update_batch=4,
+                  query_batch=64),
+        artifact="BENCH_publish.json"),
+    "service": TableSpec(
+        "service_table",
+        fast=dict(n=120, m=300, n_events=12, update_batch=4,
+                  query_batch=64),
+        artifact="BENCH_service.json"),
+    "frontdoor": TableSpec(
+        "frontdoor_table",
+        fast=dict(n=120, m=300, n_events=12, update_batch=4, readers=8,
+                  queries_per_reader=80, reps=2),
+        artifact="BENCH_frontdoor.json"),
+    "construct": TableSpec(
+        "construct_table",
+        fast=dict(sizes=((400, 1200), (1000, 3000)), hub_batch=32),
+        artifact="BENCH_construct.json"),
+    "fleet": TableSpec(
+        "fleet_table",
+        fast=dict(n=120, m=300, n_events=12, update_batch=4,
+                  query_batch=64, poll_intervals=(0.01, 0.1)),
+        artifact="BENCH_fleet.json"),
+    "analytics": TableSpec(
+        "analytics_table",
+        fast=dict(n=150, m=400, n_updates=5, events_per_update=2,
+                  pair_sample=128, l_cap=32),
+        artifact="BENCH_analytics.json"),
+}
+
+
+def list_tables() -> str:
+    """The ``--list`` text: one registered experiment per line."""
+    lines = []
+    for name, spec in TABLES.items():
+        artifact = spec.artifact or "-"
+        lines.append(f"{name:12s} paper_tables.{spec.table:18s} {artifact}")
+    lines.append(f"{'kernels':12s} {'kernels_bench (micro)':37s} -")
+    return "\n".join(lines)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--list", action="store_true",
+                    help="print the experiment registry and exit")
     ap.add_argument("--only", default=None,
-                    help="comma list: table4,figure7,figure8_9,figure10,"
-                         "figure11,table5,hybrid,serving,dist_update,"
-                         "publish,service,frontdoor,construct,fleet,"
-                         "kernels")
+                    help="comma list of registry names (see --list), "
+                         "plus 'kernels'")
     args = ap.parse_args()
 
+    if args.list:
+        print(list_tables())
+        return
+
     wanted = set(args.only.split(",")) if args.only else None
+    known = set(TABLES) | {"kernels"}
+    if wanted is not None and not wanted <= known:
+        raise SystemExit(f"unknown table(s): {sorted(wanted - known)}; "
+                         f"run --list for the registry")
 
     # dist_update wants a real (multi-device) mesh, and host devices must
     # be forced before jax initializes.  Forcing them here would distort
@@ -50,91 +149,25 @@ def main() -> None:
 
     from benchmarks import kernels_bench, paper_tables as P
 
-    def go(name, fn, **kw):
-        if wanted and name not in wanted:
-            return None
-        if name == "dist_update" and dist_done:
-            return None  # already ran in the forced-device subprocess
-        t0 = time.perf_counter()
-        out = fn(**kw)
-        print(f"## {name} done in {time.perf_counter() - t0:.1f}s\n")
-        return out
-
-    if args.fast:
-        go("table4", P.table4, sizes=((120, 300), (240, 700)), n_updates=5)
-        go("figure7", P.figure7, n=200, m=600, n_updates=8, n_queries=100)
-        go("figure8_9", P.figure8_9, n=150, m=400, n_updates=4)
-        go("figure10", P.figure10, n=150, m=400, n_insert=8, n_delete=2)
-        go("figure11", P.figure11, n=150, m=450, n_each=4)
-        go("table5", P.table5, n=150, m=400, n_edges_tested=5)
-        hybrid_rows = go("hybrid", P.hybrid_table, n=120, m=300,
-                         n_insert=12, n_delete=4, batch_size=8)
-        serving_rows = go("serving", P.serving_table, n=150, m=400,
-                          n_events=8, n_queries=512, batch=128)
-        dist_rows = go("dist_update", P.dist_update_table, n=100, m=240,
-                       n_events=8, batch_size=4)
-        publish_rows = go("publish", P.publish_table, n=120, m=300,
-                          n_events=12, update_batch=4, query_batch=64)
-        service_rows = go("service", P.service_table, n=120, m=300,
-                          n_events=12, update_batch=4, query_batch=64)
-        frontdoor_rows = go("frontdoor", P.frontdoor_table, n=120, m=300,
-                            n_events=12, update_batch=4, readers=8,
-                            queries_per_reader=80, reps=2)
-        construct_rows = go("construct", P.construct_table,
-                            sizes=((400, 1200), (1000, 3000)), hub_batch=32)
-        fleet_rows = go("fleet", P.fleet_table, n=120, m=300,
-                        n_events=12, update_batch=4, query_batch=64,
-                        poll_intervals=(0.01, 0.1))
-    else:
-        go("table4", P.table4)
-        go("figure7", P.figure7)
-        go("figure8_9", P.figure8_9)
-        go("figure10", P.figure10)
-        go("figure11", P.figure11)
-        go("table5", P.table5)
-        hybrid_rows = go("hybrid", P.hybrid_table)
-        serving_rows = go("serving", P.serving_table)
-        dist_rows = go("dist_update", P.dist_update_table)
-        publish_rows = go("publish", P.publish_table)
-        service_rows = go("service", P.service_table)
-        frontdoor_rows = go("frontdoor", P.frontdoor_table)
-        construct_rows = go("construct", P.construct_table)
-        fleet_rows = go("fleet", P.fleet_table)
     root = pathlib.Path(__file__).resolve().parent.parent
-    if hybrid_rows is not None:
-        out = root / "BENCH_hybrid.json"
-        out.write_text(json.dumps(hybrid_rows, indent=2) + "\n")
-        print(f"wrote {out}")
-    if serving_rows is not None:
-        out = root / "BENCH_serving.json"
-        out.write_text(json.dumps(serving_rows, indent=2) + "\n")
-        print(f"wrote {out}")
-    if dist_rows is not None:
-        out = root / "BENCH_dist_update.json"
-        out.write_text(json.dumps(dist_rows, indent=2) + "\n")
-        print(f"wrote {out}")
-    if publish_rows is not None:
-        out = root / "BENCH_publish.json"
-        out.write_text(json.dumps(publish_rows, indent=2) + "\n")
-        print(f"wrote {out}")
-    if service_rows is not None:
-        out = root / "BENCH_service.json"
-        out.write_text(json.dumps(service_rows, indent=2) + "\n")
-        print(f"wrote {out}")
-    if frontdoor_rows is not None:
-        out = root / "BENCH_frontdoor.json"
-        out.write_text(json.dumps(frontdoor_rows, indent=2) + "\n")
-        print(f"wrote {out}")
-    if construct_rows is not None:
-        out = root / "BENCH_construct.json"
-        out.write_text(json.dumps(construct_rows, indent=2) + "\n")
-        print(f"wrote {out}")
-    if fleet_rows is not None:
-        out = root / "BENCH_fleet.json"
-        out.write_text(json.dumps(fleet_rows, indent=2) + "\n")
-        print(f"wrote {out}")
-    go("kernels", lambda: (kernels_bench.query_kernel_vs_jnp(),
-                           kernels_bench.segment_matmul_vs_segment_sum()))
+    for name, spec in TABLES.items():
+        if wanted and name not in wanted:
+            continue
+        if name == "dist_update" and dist_done:
+            continue  # already ran in the forced-device subprocess
+        fn = getattr(P, spec.table)
+        t0 = time.perf_counter()
+        rows = fn(**(spec.fast if args.fast else spec.full))
+        print(f"## {name} done in {time.perf_counter() - t0:.1f}s\n")
+        if spec.artifact is not None and rows is not None:
+            out = root / spec.artifact
+            out.write_text(json.dumps(rows, indent=2) + "\n")
+            print(f"wrote {out}")
+    if wanted is None or "kernels" in wanted:
+        t0 = time.perf_counter()
+        kernels_bench.query_kernel_vs_jnp()
+        kernels_bench.segment_matmul_vs_segment_sum()
+        print(f"## kernels done in {time.perf_counter() - t0:.1f}s\n")
 
 
 if __name__ == "__main__":

@@ -66,6 +66,10 @@ HIERARCHY = (
      "ticket->version map"),
     ("session.lock",
      "Session._lock: per-session last submit ticket"),
+    ("analytics.lock",
+     "analytics.TopKBetweenness._lock: maintained score/snapshot swap "
+     "(a leaf in practice: scoring dispatches run before acquisition, "
+     "never under it)"),
     ("replica.lock",
      "ReplicaGroup._lock: puller counters, last error, observed "
      "remote version (never held across store.publish)"),

@@ -1,0 +1,32 @@
+"""repro.analytics: workloads served FROM the dynamic SPC index.
+
+The paper's motivating applications -- betweenness analysis, cycle
+counting and friend recommendation -- implemented as pure consumers of
+published snapshots (``SnapshotStore.current()``): they never touch the
+updater, so they run identically against ``role="updater"`` and
+``role="replica"`` services.  Entry point: ``SPCService.analytics()``
+or :class:`AnalyticsEngine`.
+"""
+
+from repro.analytics.betweenness import (TopKBetweenness, all_pairs,
+                                         betweenness, betweenness_numpy,
+                                         changed_rows, dependency_scores)
+from repro.analytics.cycles import (CycleCount, cycle_through_edge_directed,
+                                    cycle_through_vertex_directed,
+                                    cycles_through_edge,
+                                    cycles_through_vertex, neighbors)
+from repro.analytics.engine import AnalyticsEngine, PinnedAnalytics
+from repro.analytics.recommend import (Recommendation, common_neighbor_ids,
+                                       recommend, recommend_numpy,
+                                       recommendation_features)
+
+__all__ = [
+    "AnalyticsEngine", "PinnedAnalytics",
+    "TopKBetweenness", "betweenness", "betweenness_numpy",
+    "dependency_scores", "changed_rows", "all_pairs",
+    "CycleCount", "cycles_through_vertex", "cycles_through_edge",
+    "cycle_through_edge_directed", "cycle_through_vertex_directed",
+    "neighbors",
+    "Recommendation", "recommend", "recommend_numpy",
+    "recommendation_features", "common_neighbor_ids",
+]

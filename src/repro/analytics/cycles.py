@@ -1,0 +1,319 @@
+"""Shortest-cycle counting from the SPC index (Feng et al.'s workload).
+
+Directed graphs (``repro.core.directed`` labels, Appendix C.1): a
+shortest path is simple, so a shortest cycle through arc ``a -> b`` is
+exactly the arc plus a shortest ``b -> a`` path --
+
+    len = 1 + d(b -> a),   count = sigma(b -> a)
+
+one ``L_out(b) x L_in(a)`` scan.  A shortest cycle through vertex ``v``
+leaves ``v`` by exactly one out-arc, so minimising ``1 + d(w -> v)``
+over out-neighbours ``w`` and summing the counts of the minimisers is
+exact.  Both are differential-tested against ``bfs_spc_directed`` (BFS
+on the raw graph -- no labels anywhere).
+
+Undirected graphs (the jitted ``SPCIndex``): both endpoints of a cycle
+edge at ``v`` are neighbours of ``v``, hence at mutual distance <= 2,
+so the index resolves the short end of the cycle spectrum *exactly*:
+
+* triangles through ``v``: adjacent neighbour pairs (u, w);
+* quadrilaterals through ``v``: for every neighbour pair,
+  ``|N(u) & N(w)| - 1`` (each common neighbour besides ``v`` closes
+  ``v-u-x-w-v``), with neighbourhoods themselves recovered from
+  ``one_to_all`` rows -- the path-counting exclusion that makes
+  hub-label *counts* strictly more useful than distances;
+* if both are zero, NO cycle through ``v`` of length <= 4 exists, so
+  the shortest cycle -- if any -- has length >= 5, beyond the
+  shortest-path horizon of the index.  That bound is reported as
+  ``certified=False`` rather than guessed at.
+
+Odd/even split falls out: length 3 is the only odd candidate on the
+horizon, length 4 the only even one.  The same reasoning counts cycles
+through an *edge* {a, b} via gate pairs in N(a) x N(b).  Everything is
+computed off one pinned snapshot: neighbourhoods are recovered from
+``one_to_all`` (d == 1), never from the updater's adjacency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import query as Q
+from repro.core.directed import INF as DINF
+from repro.core.directed import RefDiGraph, RefDiSPCIndex, bfs_spc_directed
+from repro.core.graph import INF
+from repro.core.labels import SPCIndex
+from repro.serve.engine import DEFAULT_BUCKETS, bucket_size
+
+
+@dataclasses.dataclass(frozen=True)
+class CycleCount:
+    """Shortest cycle through a vertex/edge.
+
+    ``length``/``count`` describe the shortest cycle found on the
+    index's horizon (INF/0 when none).  ``certified`` means the result
+    is exact; when False, no cycle of length <= ``horizon`` exists and
+    longer ones are invisible to a shortest-path index.  ``odd_count``
+    / ``even_count`` count shortest odd (length 3) and even (length 4)
+    cycles on the horizon.
+    """
+    length: int
+    count: int
+    certified: bool
+    horizon: int
+    odd_count: int
+    even_count: int
+
+
+# --------------------------------------------------------------------------
+# Directed: one L_out x L_in scan per quantity (exact at any length).
+# --------------------------------------------------------------------------
+def cycle_through_edge_directed(idx: RefDiSPCIndex, a: int,
+                                b: int) -> Tuple[int, int]:
+    """(length, count) of shortest cycles through arc ``a -> b``."""
+    d, c = idx.query(b, a)
+    if d >= DINF:
+        return DINF, 0
+    return d + 1, c
+
+
+def cycle_through_vertex_directed(g: RefDiGraph, idx: RefDiSPCIndex,
+                                  v: int) -> Tuple[int, int]:
+    """(length, count) of shortest cycles through vertex ``v``; each
+    such cycle uses exactly one out-arc of ``v``, so counts add."""
+    best, cnt = DINF, 0
+    for w in g.out[v]:
+        d, c = idx.query(w, v)
+        if d >= DINF:
+            continue
+        if d + 1 < best:
+            best, cnt = d + 1, c
+        elif d + 1 == best:
+            cnt += c
+    return best, cnt
+
+
+def cycle_through_edge_directed_oracle(g: RefDiGraph, a: int,
+                                       b: int) -> Tuple[int, int]:
+    """Brute force: BFS from b on the raw digraph (no labels)."""
+    dist, cnt = bfs_spc_directed(g, b, forward=True)
+    if dist[a] >= DINF:
+        return DINF, 0
+    return int(dist[a]) + 1, int(cnt[a])
+
+
+def cycle_through_vertex_directed_oracle(g: RefDiGraph,
+                                         v: int) -> Tuple[int, int]:
+    best, cnt = DINF, 0
+    for w in g.out[v]:
+        d, c = cycle_through_edge_directed_oracle(g, v, w)
+        if d < best:
+            best, cnt = d, c
+        elif d == best and d < DINF:
+            cnt += c
+    return best, cnt
+
+
+# --------------------------------------------------------------------------
+# Undirected: gate-pair scans off one pinned SPCIndex snapshot.
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=())
+def _neighbors_mask(idx: SPCIndex, v) -> jax.Array:
+    d, _ = Q.one_to_all(idx, v)
+    return d[:idx.n] == 1
+
+
+@partial(jax.jit, static_argnames=())
+def _neighbor_masks(idx: SPCIndex, vs: jax.Array) -> jax.Array:
+    """bool [K, n] adjacency masks for sources ``vs`` (pad with the
+    dump row ``n``: its one_to_all row is all-INF, mask all-False)."""
+    def one(v):
+        d, _ = Q.one_to_all(idx, v)
+        return d[:idx.n] == 1
+    return jax.vmap(one)(vs)
+
+
+def neighbors(idx: SPCIndex, v: int) -> np.ndarray:
+    """N(v) recovered from the index itself (d(v, .) == 1) -- keeps the
+    analytics layer off the updater's adjacency entirely."""
+    return np.flatnonzero(np.asarray(_neighbors_mask(idx, v)))
+
+
+@partial(jax.jit, static_argnames=())
+def _pair_scan(idx: SPCIndex, us: jax.Array, ws: jax.Array):
+    """d/sigma for gate pairs; pad pairs are dump rows (INF, 0)."""
+    hu, du, cu = Q.gather_rows(idx, us)
+    hw, dw, cw = Q.gather_rows(idx, ws)
+    return Q.merge_rows(hu, du, cu, hw, dw, cw)
+
+
+def _scan_pairs(idx: SPCIndex, us: np.ndarray, ws: np.ndarray,
+                buckets: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+    k = us.shape[0]
+    if k == 0:
+        return (np.zeros(0, dtype=np.int64),) * 2
+    cap = bucket_size(k, buckets)
+    pad_u = np.full(cap, idx.n, dtype=np.int32)
+    pad_w = np.full(cap, idx.n, dtype=np.int32)
+    pad_u[:k] = us
+    pad_w[:k] = ws
+    d, c = _pair_scan(idx, jnp.asarray(pad_u), jnp.asarray(pad_w))
+    return np.asarray(d)[:k].astype(np.int64), np.asarray(c)[:k]
+
+
+def _summarize(tri: int, quad: int) -> CycleCount:
+    if tri > 0:
+        return CycleCount(3, tri, True, 4, tri, quad)
+    if quad > 0:
+        return CycleCount(4, quad, True, 4, 0, quad)
+    return CycleCount(int(INF), 0, False, 4, 0, 0)
+
+
+#: Padding ladder for the neighbour-mask kernel's source axis.
+NEIGHBOR_TILES = (8, 32, 128, 512)
+
+
+def cycles_through_vertex(idx: SPCIndex, v: int, *,
+                          tiles: Sequence[int] = NEIGHBOR_TILES
+                          ) -> CycleCount:
+    """Shortest cycles through vertex ``v`` on the undirected index."""
+    nbr = neighbors(idx, v)
+    k = nbr.shape[0]
+    if k < 2:
+        return _summarize(0, 0)
+    cap = bucket_size(k, tiles)
+    pad = np.full(cap, idx.n, dtype=np.int32)
+    pad[:k] = nbr
+    masks = np.asarray(_neighbor_masks(idx, jnp.asarray(pad)))[:k]  # [k, n]
+    iu, iw = np.triu_indices(k, 1)
+    adj = masks[:, nbr]                              # adjacency among N(v)
+    tri = int(adj[iu, iw].sum())
+    common = masks.astype(np.int64) @ masks.T        # v itself always common
+    quad = int((common[iu, iw] - 1).sum())
+    return _summarize(tri, quad)
+
+
+def cycles_through_edge(idx: SPCIndex, a: int, b: int, *,
+                        buckets: Sequence[int] = DEFAULT_BUCKETS
+                        ) -> CycleCount:
+    """Shortest cycles through undirected edge {a, b}: gate pairs
+    (x, y) in (N(a) - b) x (N(b) - a); x == y closes a triangle,
+    d(x, y) == 1 closes a quadrilateral."""
+    na = neighbors(idx, a)
+    if b not in set(na.tolist()):
+        raise ValueError(f"({a}, {b}) is not an edge of the snapshot")
+    nb = neighbors(idx, b)
+    na = na[na != b]
+    nb = nb[nb != a]
+    if na.size == 0 or nb.size == 0:
+        return _summarize(0, 0)
+    tri = int(np.intersect1d(na, nb).size)
+    xs, ys = np.meshgrid(na, nb, indexing="ij")
+    xs, ys = xs.ravel(), ys.ravel()
+    off = xs != ys
+    d, _ = _scan_pairs(idx, xs[off].astype(np.int32),
+                       ys[off].astype(np.int32), buckets)
+    quad = int((d == 1).sum())
+    return _summarize(tri, quad)
+
+
+# --------------------------------------------------------------------------
+# Undirected brute-force oracle (BFS with the gate vertex deleted).
+# --------------------------------------------------------------------------
+def _bfs_spc_avoiding(n: int, adj: List[set], s: int, banned: frozenset):
+    import collections
+    dist = np.full(n, int(INF), dtype=np.int64)
+    cnt = np.zeros(n, dtype=np.int64)
+    dist[s] = 0
+    cnt[s] = 1
+    q = collections.deque([s])
+    while q:
+        x = q.popleft()
+        for y in adj[x]:
+            if y in banned:
+                continue
+            if dist[y] >= INF:
+                dist[y] = dist[x] + 1
+                cnt[y] = cnt[x]
+                q.append(y)
+            elif dist[y] == dist[x] + 1:
+                cnt[y] += cnt[x]
+    return dist, cnt
+
+
+def cycles_through_vertex_oracle(n: int, edges, v: int) -> Tuple[int, int]:
+    """True (length, count) of shortest cycles through ``v``: for every
+    neighbour u, shortest paths from u in G - v to the other
+    neighbours; each shortest cycle is counted once per direction, then
+    halved."""
+    adj: List[set] = [set() for _ in range(n)]
+    for a, b in edges:
+        adj[a].add(b)
+        adj[b].add(a)
+    nbr = sorted(adj[v])
+    best, total = int(INF), 0
+    for u in nbr:
+        dist, cnt = _bfs_spc_avoiding(n, adj, u, frozenset([v]))
+        for w in nbr:
+            if w == u or dist[w] >= INF:
+                continue
+            length = int(dist[w]) + 2
+            if length < best:
+                best, total = length, int(cnt[w])
+            elif length == best:
+                total += int(cnt[w])
+    if best >= INF:
+        return int(INF), 0
+    return best, total // 2
+
+
+def four_cycles_through_vertex_oracle(n: int, edges, v: int) -> int:
+    """Brute-force number of quadrilaterals containing ``v`` (the
+    ``even_count`` oracle): common neighbours besides ``v`` over all
+    neighbour pairs."""
+    adj: List[set] = [set() for _ in range(n)]
+    for a, b in edges:
+        adj[a].add(b)
+        adj[b].add(a)
+    nbr = sorted(adj[v])
+    total = 0
+    for i, u in enumerate(nbr):
+        for w in nbr[i + 1:]:
+            total += len((adj[u] & adj[w]) - {v})
+    return total
+
+
+def triangles_through_vertex_oracle(n: int, edges, v: int) -> int:
+    """Brute-force number of triangles containing ``v`` (the
+    ``odd_count`` oracle)."""
+    adj: List[set] = [set() for _ in range(n)]
+    for a, b in edges:
+        adj[a].add(b)
+        adj[b].add(a)
+    nbr = sorted(adj[v])
+    return sum(1 for i, u in enumerate(nbr) for w in nbr[i + 1:]
+               if w in adj[u])
+
+
+def cycles_through_edge_oracle(n: int, edges, a: int,
+                               b: int) -> Tuple[int, int]:
+    """True (length, count) of shortest cycles through edge {a, b}:
+    shortest a -> b paths with the edge itself removed."""
+    adj: List[set] = [set() for _ in range(n)]
+    for x, y in edges:
+        adj[x].add(y)
+        adj[y].add(x)
+    if b not in adj[a]:
+        raise ValueError(f"({a}, {b}) is not an edge")
+    adj[a].discard(b)
+    adj[b].discard(a)
+    dist, cnt = _bfs_spc_avoiding(n, adj, a, frozenset())
+    if dist[b] >= INF:
+        return int(INF), 0
+    return int(dist[b]) + 1, int(cnt[b])

@@ -35,6 +35,10 @@ class DSPCArchConfig:
     # local for updaters; replicas must name a shared medium)
     publish_dir: str | None = None  # the shared publication directory
     poll_interval_s: float = 0.05   # replica staleness bound (polling)
+    # -- analytics knobs (repro.analytics) ------------------------------
+    analytics_pair_sample: int = 512  # sampled (s, t) betweenness workload
+    analytics_top_k: int = 16         # maintained top-k size
+    analytics_v_block: int = 256      # candidate-vertex tile per dispatch
     # -- FrontDoor knobs (repro.serve.frontdoor) ------------------------
     max_live_batches: int = 4   # admission bound, in coalesced batches
     dispatchers: int = 2        # coalescing dispatcher threads
@@ -47,7 +51,9 @@ SMOKE = DSPCArchConfig(name="dspc-smoke", n=64, m=160, l_cap=16,
                        query_batch=256, construct_batch=8,
                        update_batch=8, queue_size=4,
                        replicas=2, max_live_batches=2, dispatchers=2,
-                       deadline_s=10.0, frontdoor_batch=64)
+                       deadline_s=10.0, frontdoor_batch=64,
+                       analytics_pair_sample=64, analytics_top_k=8,
+                       analytics_v_block=64)
 
 SPEC = ArchSpec(arch_id="dspc", family="dspc", config=CONFIG, smoke=SMOKE,
                 shapes=DSPC_SHAPES,

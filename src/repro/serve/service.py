@@ -790,6 +790,17 @@ class SPCService:
         from repro.serve.frontdoor import FrontDoor
         return FrontDoor(self, **knobs)
 
+    def analytics(self, **knobs) -> "object":
+        """Build a :class:`repro.analytics.AnalyticsEngine` over this
+        service's published snapshots: betweenness, shortest-cycle and
+        recommendation workloads, each computed from ONE pinned
+        snapshot.  Reads only the snapshot store -- works identically
+        on ``role="replica"`` services (a fleet serves analytics
+        without touching the updater).  Knobs pass through to the
+        engine constructor (``pair_sample=``, ``top_k=``, ...)."""
+        from repro.analytics import AnalyticsEngine
+        return AnalyticsEngine(self, **knobs)
+
     # -- introspection / state ----------------------------------------------
     @property
     def n(self) -> int:

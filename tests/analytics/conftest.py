@@ -1,0 +1,13 @@
+"""Analytics tests run under the runtime shadow checker, exactly like
+``tests/serve``: ``REPRO_SHADOW_LOCKS=1`` makes ``analytics.lock`` (the
+``TopKBetweenness`` swap lock) an instrumented lock, so every
+maintainer/service interleaving here is checked against the declared
+hierarchy -- including the "never held across a JAX dispatch" guard.
+"""
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def shadow_locks(monkeypatch):
+    monkeypatch.setenv("REPRO_SHADOW_LOCKS", "1")

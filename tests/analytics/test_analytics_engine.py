@@ -1,0 +1,111 @@
+"""The AnalyticsEngine contract: every answer comes from ONE pinned
+published snapshot, identically for updater services, bare stores and
+puller-fed replicas."""
+
+import numpy as np
+import pytest
+
+from repro.analytics import AnalyticsEngine, betweenness
+from repro.analytics.betweenness import DEFAULT_V_TILES
+from repro.configs.dspc import SMOKE
+from repro.core.dynamic import DynamicSPC
+from repro.data import graph_stream, random_graph_edges
+from repro.serve import SPCService
+from repro.serve.publish import SnapshotStore
+
+N, M = 24, 60
+
+
+def test_engine_requires_a_snapshot_source():
+    with pytest.raises(TypeError):
+        AnalyticsEngine(object())
+
+
+def test_pinned_view_survives_concurrent_publishes():
+    edges = random_graph_edges(N, M, seed=0)
+    with SPCService(N, edges, l_cap=28, update_batch=4) as svc:
+        eng = svc.analytics(pair_sample=64)
+        view = eng.pin()
+        v0 = view.version
+        before = view.betweenness()
+        rec_before = view.recommend(0)
+        svc.submit(graph_stream(edges, N, 6, 3, seed=1))
+        svc.drain()
+        # the pinned view still answers from the old snapshot...
+        assert view.version == v0
+        np.testing.assert_array_equal(view.betweenness(), before)
+        assert view.recommend(0) == rec_before
+        # ...while a fresh pin sees the published update
+        fresh = eng.pin()
+        assert fresh.version > v0
+
+
+def test_engine_over_bare_store_equals_service():
+    edges = random_graph_edges(N, M, seed=2)
+    spc = DynamicSPC(N, edges, l_cap=28)
+    store = SnapshotStore()
+    store.publish(spc.index)
+    eng = AnalyticsEngine(store, pair_sample=64)
+    with SPCService(N, edges, l_cap=28) as svc:
+        svc_eng = svc.analytics(pair_sample=64)
+        np.testing.assert_allclose(eng.betweenness(),
+                                   svc_eng.betweenness(),
+                                   rtol=1e-12, atol=0)
+        assert eng.top_betweenness(4) == svc_eng.top_betweenness(4)
+        view = eng.pin()
+        assert view.n == N
+        np.testing.assert_allclose(
+            view.betweenness(), betweenness(spc.index),
+            rtol=1e-12, atol=0)
+
+
+def test_from_config_reads_analytics_knobs():
+    edges = random_graph_edges(N, M, seed=3)
+    spc = DynamicSPC(N, edges, l_cap=28)
+    store = SnapshotStore()
+    store.publish(spc.index)
+    eng = AnalyticsEngine.from_config(store, SMOKE)
+    assert eng.pair_sample == SMOKE.analytics_pair_sample
+    assert eng.top_k == SMOKE.analytics_top_k
+    assert eng._v_tiles[-1] == SMOKE.analytics_v_block
+    assert all(t < SMOKE.analytics_v_block for t in eng._v_tiles[:-1])
+    assert set(eng._v_tiles[:-1]) <= set(DEFAULT_V_TILES)
+
+
+def test_sample_pairs_distinct_and_reproducible():
+    edges = random_graph_edges(N, M, seed=4)
+    spc = DynamicSPC(N, edges, l_cap=28)
+    store = SnapshotStore()
+    store.publish(spc.index)
+    eng = AnalyticsEngine(store, pair_sample=100, seed=7)
+    s, t = eng.sample_pairs()
+    assert s.shape == t.shape == (100,)
+    assert (s != t).all()
+    assert len(set(zip(s.tolist(), t.tolist()))) == 100
+    s2, t2 = eng.sample_pairs()
+    np.testing.assert_array_equal(s, s2)
+    np.testing.assert_array_equal(t, t2)
+    # the workload caps at the number of distinct ordered pairs
+    tiny = DynamicSPC(3, [(0, 1), (1, 2)], l_cap=8)
+    tiny_store = SnapshotStore()
+    tiny_store.publish(tiny.index)
+    s3, t3 = AnalyticsEngine(tiny_store, pair_sample=100).sample_pairs()
+    assert s3.shape == (6,)
+
+
+def test_replica_role_serves_analytics(tmp_path):
+    """A puller-fed replica service answers analytics identically to
+    the updater it follows -- the engine never touches the updater."""
+    edges = random_graph_edges(N, M, seed=5)
+    updater = SPCService(N, edges, l_cap=28, transport="dir",
+                         publish_dir=str(tmp_path))
+    replica = SPCService(role="replica", transport="dir",
+                         publish_dir=str(tmp_path), poll_interval_s=0.01)
+    with updater, replica:
+        replica.drain()  # catch up to the committed LATEST
+        up = updater.analytics(pair_sample=64).pin()
+        rep = replica.analytics(pair_sample=64).pin()
+        assert rep.version == up.version
+        np.testing.assert_array_equal(rep.betweenness(), up.betweenness())
+        assert rep.cycles_through_vertex(0) == up.cycles_through_vertex(0)
+        assert rep.recommend(1) == up.recommend(1)

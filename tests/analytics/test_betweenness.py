@@ -1,0 +1,160 @@
+"""Differential tests: jitted pair-dependency betweenness vs the
+Brandes-style numpy oracle, static and across dynamic streams, plus the
+incremental ``TopKBetweenness`` maintainer through a live service."""
+
+import numpy as np
+import pytest
+
+from repro.analytics import (TopKBetweenness, all_pairs, betweenness,
+                             betweenness_numpy, changed_rows)
+from repro.core import labels as L
+from repro.core.dynamic import DynamicSPC
+from repro.data import graph_stream, random_graph_edges
+from repro.serve import SPCService
+
+N = 18
+L_CAP = 24
+
+
+def _apply_to_set(edge_set, events):
+    for op, a, b in events:
+        e = (min(a, b), max(a, b))
+        if op == "+":
+            edge_set.add(e)
+        else:
+            edge_set.discard(e)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_betweenness_matches_oracle_static(seed):
+    edges = random_graph_edges(N, 40, seed=seed)
+    spc = DynamicSPC(N, edges, l_cap=L_CAP)
+    bc = betweenness(spc.index)
+    oracle = betweenness_numpy(N, edges)
+    np.testing.assert_allclose(bc, oracle, rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_betweenness_under_dynamic_stream(seed):
+    """Oracle agreement after every applied chunk of a mixed
+    insert/delete stream -- including sparse post-delete states."""
+    edges = random_graph_edges(N, 30, seed=seed)
+    spc = DynamicSPC(N, edges, l_cap=L_CAP)
+    current = set(edges)
+    events = graph_stream(edges, N, 8, 6, seed=seed + 10)
+    for lo in range(0, len(events), 4):
+        chunk = events[lo:lo + 4]
+        spc.apply_events(chunk)
+        _apply_to_set(current, chunk)
+        bc = betweenness(spc.index)
+        oracle = betweenness_numpy(N, sorted(current))
+        np.testing.assert_allclose(bc, oracle, rtol=1e-9, atol=1e-9)
+
+
+def test_betweenness_disconnected_components():
+    """Cross-component pairs contribute nothing; per-component scores
+    equal the oracle."""
+    # two disjoint 4-cliques + two isolated vertices
+    edges = ([(a, b) for a in range(4) for b in range(a + 1, 4)]
+             + [(a, b) for a in range(4, 8) for b in range(a + 1, 8)])
+    spc = DynamicSPC(10, edges, l_cap=16)
+    bc = betweenness(spc.index)
+    oracle = betweenness_numpy(10, edges)
+    np.testing.assert_allclose(bc, oracle, rtol=1e-9, atol=1e-9)
+    assert bc[8] == 0.0 and bc[9] == 0.0
+
+
+def test_betweenness_restricted_pairs_and_vertices():
+    edges = random_graph_edges(N, 40, seed=5)
+    spc = DynamicSPC(N, edges, l_cap=L_CAP)
+    rng = np.random.default_rng(0)
+    s, t = all_pairs(N)
+    keep = rng.choice(s.shape[0], size=25, replace=False)
+    pairs = (s[keep], t[keep])
+    verts = np.asarray([0, 3, 7, 11], dtype=np.int32)
+    bc = betweenness(spc.index, pairs=pairs, vertices=verts)
+    oracle = betweenness_numpy(N, edges, pairs=pairs, vertices=verts)
+    assert bc.shape == (4,)
+    np.testing.assert_allclose(bc, oracle, rtol=1e-9, atol=1e-9)
+
+
+def test_changed_rows_ignores_pure_repad_and_rejects_n_mismatch():
+    edges = random_graph_edges(N, 40, seed=6)
+    spc = DynamicSPC(N, edges, l_cap=L_CAP)
+    idx = spc.index
+    repadded = L.repad(idx, idx.l_cap * 2)
+    assert not changed_rows(idx, repadded).any()
+    assert not changed_rows(repadded, idx).any()
+    grown = L.add_vertices(idx, 1)
+    with pytest.raises(ValueError):
+        changed_rows(idx, grown)
+
+
+def test_changed_rows_recovers_affected_set():
+    """An applied update only flips rows whose labels actually moved,
+    and the endpoints of a fresh edge always move."""
+    edges = random_graph_edges(N, 30, seed=7)
+    spc = DynamicSPC(N, edges, l_cap=L_CAP)
+    before = spc.index
+    present = set(map(tuple, edges))
+    a, b = next((a, b) for a in range(N) for b in range(a + 1, N)
+                if (a, b) not in present)
+    spc.apply_events([("+", a, b)])
+    diff = changed_rows(before, spc.index)
+    assert diff[a] or diff[b]
+    assert not changed_rows(spc.index, spc.index).any()
+
+
+def _service_stream_maintainer(full_rescore_frac):
+    n, m = 24, 60
+    edges = random_graph_edges(n, m, seed=8)
+    events = graph_stream(edges, n, 10, 6, seed=9)
+    current = set(edges)
+    with SPCService(n, edges, l_cap=28, update_batch=4) as svc:
+        eng = svc.analytics(pair_sample=128, seed=1)
+        pairs = eng.sample_pairs()
+        maint = eng.betweenness_maintainer(
+            pairs, full_rescore_frac=full_rescore_frac)
+        for lo in range(0, len(events), 4):
+            chunk = events[lo:lo + 4]
+            svc.submit(chunk)
+            svc.drain()
+            _apply_to_set(current, chunk)
+            maint.refresh()
+            # maintained == one-shot full recompute == BFS oracle
+            snap_idx = svc.store.current().index
+            full = betweenness(snap_idx, pairs=pairs)
+            np.testing.assert_allclose(maint.scores(), full,
+                                       rtol=1e-9, atol=1e-9)
+            oracle = betweenness_numpy(n, sorted(current), pairs=pairs)
+            np.testing.assert_allclose(maint.scores(), oracle,
+                                       rtol=1e-9, atol=1e-9)
+        assert maint.version == svc.store.current().version
+    return maint
+
+
+def test_maintainer_matches_full_and_oracle_through_service():
+    maint = _service_stream_maintainer(full_rescore_frac=0.5)
+    assert maint.incremental_refreshes > 0  # the fast path actually ran
+    top = maint.top(5)
+    scores = dict(zip(maint._vertices.tolist(), maint.scores().tolist()))
+    assert [s for _, s in top] == sorted(scores.values(), reverse=True)[:5]
+
+
+def test_maintainer_full_fallback_stays_exact():
+    maint = _service_stream_maintainer(full_rescore_frac=-1.0)
+    assert maint.incremental_refreshes == 0  # every refresh fell back
+
+
+def test_maintainer_refresh_is_noop_on_same_version():
+    edges = random_graph_edges(N, 40, seed=10)
+    spc = DynamicSPC(N, edges, l_cap=L_CAP)
+    from repro.serve.publish import SnapshotStore
+    store = SnapshotStore()
+    store.publish(spc.index)
+    pairs = all_pairs(N)
+    maint = TopKBetweenness(store, pairs, k=4)
+    before = (maint.full_recomputes, maint.incremental_refreshes)
+    top1 = maint.refresh()
+    assert (maint.full_recomputes, maint.incremental_refreshes) == before
+    assert top1 == maint.top()

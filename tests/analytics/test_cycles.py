@@ -1,0 +1,158 @@
+"""Shortest-cycle counting vs brute-force BFS oracles: directed labels
+(exact at any length) and the undirected index (exact on its certified
+horizon, honest beyond it)."""
+
+import numpy as np
+import pytest
+
+from repro.analytics import (cycle_through_edge_directed,
+                             cycle_through_vertex_directed,
+                             cycles_through_edge, cycles_through_vertex,
+                             neighbors)
+from repro.analytics.cycles import (cycle_through_edge_directed_oracle,
+                                    cycle_through_vertex_directed_oracle,
+                                    cycles_through_edge_oracle,
+                                    cycles_through_vertex_oracle,
+                                    four_cycles_through_vertex_oracle,
+                                    triangles_through_vertex_oracle)
+from repro.core.directed import (RefDiGraph, hp_spc_directed,
+                                 inc_spc_directed)
+from repro.core.dynamic import DynamicSPC
+from repro.core.graph import INF
+from repro.data import graph_stream, random_graph_edges
+
+
+def _random_digraph(n, m, seed):
+    rng = np.random.default_rng(seed)
+    arcs = set()
+    while len(arcs) < m:
+        a, b = (int(x) for x in rng.integers(0, n, 2))
+        if a != b:
+            arcs.add((a, b))
+    return sorted(arcs)
+
+
+# --------------------------------------------------------------------------
+# Directed: one L_out x L_in scan, exact at any cycle length.
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_directed_cycles_match_oracle(seed):
+    n = 14
+    arcs = _random_digraph(n, 30, seed)
+    g = RefDiGraph(n, arcs)
+    idx = hp_spc_directed(g)
+    for v in range(n):
+        assert (cycle_through_vertex_directed(g, idx, v)
+                == cycle_through_vertex_directed_oracle(g, v)), v
+    for a, b in arcs[:10]:
+        assert (cycle_through_edge_directed(idx, a, b)
+                == cycle_through_edge_directed_oracle(g, a, b)), (a, b)
+
+
+def test_directed_cycles_after_inserts_and_rebuild():
+    """inc_spc_directed-repaired and post-delete rebuilt indexes stay
+    oracle-exact."""
+    n = 12
+    arcs = _random_digraph(n, 20, seed=3)
+    g = RefDiGraph(n, arcs)
+    idx = hp_spc_directed(g)
+    rng = np.random.default_rng(4)
+    for _ in range(6):
+        a, b = (int(x) for x in rng.integers(0, n, 2))
+        if a == b or g.has_edge(a, b):
+            continue
+        inc_spc_directed(g, idx, a, b)
+    for v in range(n):
+        assert (cycle_through_vertex_directed(g, idx, v)
+                == cycle_through_vertex_directed_oracle(g, v)), v
+    # delete some arcs; the directed driver's delete path is a rebuild
+    all_arcs = sorted((x, y) for x in range(n) for y in g.out[x])
+    kept = [arc for i, arc in enumerate(all_arcs) if i % 3]
+    g2 = RefDiGraph(n, kept)
+    idx2 = hp_spc_directed(g2)
+    for v in range(n):
+        assert (cycle_through_vertex_directed(g2, idx2, v)
+                == cycle_through_vertex_directed_oracle(g2, v)), v
+
+
+def test_directed_acyclic_reports_inf():
+    n = 8
+    arcs = [(a, b) for a in range(n) for b in range(a + 1, n) if b - a <= 2]
+    g = RefDiGraph(n, arcs)
+    idx = hp_spc_directed(g)
+    import repro.core.directed as D
+    for v in range(n):
+        assert cycle_through_vertex_directed(g, idx, v) == (D.INF, 0)
+    for a, b in arcs:
+        assert cycle_through_edge_directed(idx, a, b) == (D.INF, 0)
+
+
+# --------------------------------------------------------------------------
+# Undirected: certified horizon <= 4, honest beyond.
+# --------------------------------------------------------------------------
+def _assert_vertex_cycles(idx, n, edges, v):
+    cyc = cycles_through_vertex(idx, v)
+    length, count = cycles_through_vertex_oracle(n, edges, v)
+    tri = triangles_through_vertex_oracle(n, edges, v)
+    quad = four_cycles_through_vertex_oracle(n, edges, v)
+    assert cyc.odd_count == tri, v
+    assert cyc.even_count == quad, v
+    if cyc.certified:
+        assert (cyc.length, cyc.count) == (length, count), v
+    else:
+        # honest bound: truly no cycle of length <= horizon through v
+        assert length >= 5 or length >= INF, v
+        assert (cyc.length, cyc.count) == (int(INF), 0), v
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_undirected_vertex_cycles_under_stream(seed):
+    n = 16
+    edges = random_graph_edges(n, 26, seed=seed)
+    spc = DynamicSPC(n, edges, l_cap=24)
+    current = set(edges)
+    events = graph_stream(edges, n, 6, 6, seed=seed + 20)
+    for lo in range(0, len(events), 6):
+        chunk = events[lo:lo + 6]
+        spc.apply_events(chunk)
+        for op, a, b in chunk:
+            e = (min(a, b), max(a, b))
+            current.add(e) if op == "+" else current.discard(e)
+        for v in range(n):
+            _assert_vertex_cycles(spc.index, n, sorted(current), v)
+
+
+def test_undirected_girth_beyond_horizon_uncertified():
+    # a 6-cycle: shortest cycle length 6 > horizon 4 -> certified=False
+    n = 6
+    edges = [(i, (i + 1) % n) for i in range(n)]
+    spc = DynamicSPC(n, edges, l_cap=12)
+    for v in range(n):
+        cyc = cycles_through_vertex(spc.index, v)
+        assert not cyc.certified
+        assert (cyc.length, cyc.count) == (int(INF), 0)
+        assert cyc.horizon == 4
+        assert cycles_through_vertex_oracle(n, edges, v) == (6, 1)
+
+
+@pytest.mark.parametrize("seed", [2, 3])
+def test_undirected_edge_cycles_match_oracle(seed):
+    n = 16
+    edges = random_graph_edges(n, 30, seed=seed)
+    spc = DynamicSPC(n, edges, l_cap=24)
+    for a, b in edges[:12]:
+        cyc = cycles_through_edge(spc.index, a, b)
+        length, count = cycles_through_edge_oracle(n, edges, a, b)
+        if cyc.certified:
+            assert (cyc.length, cyc.count) == (length, count), (a, b)
+        else:
+            assert length >= 5 or length >= INF, (a, b)
+
+
+def test_undirected_edge_validation_and_neighbors():
+    edges = [(0, 1), (1, 2)]
+    spc = DynamicSPC(4, edges, l_cap=8)
+    with pytest.raises(ValueError):
+        cycles_through_edge(spc.index, 0, 2)
+    assert neighbors(spc.index, 1).tolist() == [0, 2]
+    assert neighbors(spc.index, 3).tolist() == []

@@ -1,0 +1,97 @@
+"""Degenerate graphs (n=1, zero edges, fully disconnected) through the
+batched constructor, capacity provisioning and every analytics surface:
+the shapes that never show up in the random-stream suites but break
+vectorized code first."""
+
+import numpy as np
+import pytest
+
+from repro.analytics import (AnalyticsEngine, all_pairs, betweenness,
+                             betweenness_numpy, cycles_through_vertex,
+                             neighbors, recommend, recommend_numpy,
+                             recommendation_features)
+from repro.analytics.cycles import cycles_through_vertex_oracle
+from repro.core import from_edges
+from repro.core.construct import (build_index, build_index_batched,
+                                  provision_l_cap)
+from repro.core.graph import INF
+from repro.serve.publish import SnapshotStore
+
+
+def _build(n, edges, hub_batch=4):
+    g = from_edges(n, edges)
+    cap = provision_l_cap(g)
+    # the provisioning floor holds, clamped by the graph's own size
+    assert cap >= min(4, n + 1)
+    idx = build_index_batched(g, cap, hub_batch=hub_batch)
+    assert int(idx.overflow) == 0
+    # batched == sequential even on the degenerate shapes
+    seq = build_index(g, idx.l_cap)
+    np.testing.assert_array_equal(np.asarray(idx.hub), np.asarray(seq.hub))
+    np.testing.assert_array_equal(np.asarray(idx.dist),
+                                  np.asarray(seq.dist))
+    np.testing.assert_array_equal(np.asarray(idx.cnt), np.asarray(seq.cnt))
+    return idx
+
+
+@pytest.mark.parametrize("n,edges", [
+    (1, []),                      # single vertex
+    (8, []),                      # zero-edge graph
+    (6, [(0, 1), (2, 3)]),        # fully disconnected components
+])
+def test_degenerate_builds_and_betweenness(n, edges):
+    idx = _build(n, edges)
+    bc = betweenness(idx)
+    np.testing.assert_allclose(bc, betweenness_numpy(n, edges),
+                               rtol=0, atol=0)
+    assert (bc == 0.0).all()      # nothing lies on a 3-vertex geodesic
+    s, t = all_pairs(n)
+    assert s.shape == (n * (n - 1),)
+
+
+@pytest.mark.parametrize("n,edges", [(1, []), (8, []), (6, [(0, 1), (2, 3)])])
+def test_degenerate_cycles_and_neighbors(n, edges):
+    idx = _build(n, edges)
+    for v in range(n):
+        cyc = cycles_through_vertex(idx, v)
+        assert (cyc.length, cyc.count, cyc.certified) == (int(INF), 0, False)
+        assert cycles_through_vertex_oracle(n, edges, v) == (int(INF), 0)
+    deg = {a: 1 for e in edges for a in e}
+    for v in range(n):
+        assert neighbors(idx, v).shape == (deg.get(v, 0),)
+
+
+@pytest.mark.parametrize("n,edges", [(1, []), (8, []), (6, [(0, 1), (2, 3)])])
+def test_degenerate_recommendation(n, edges):
+    idx = _build(n, edges)
+    for u in range(n):
+        got = recommend(idx, u)
+        assert got == recommend_numpy(n, edges, u) == []
+    feats = recommendation_features(idx, 0, np.arange(n))
+    assert feats.shape == (n, 4)
+    assert feats[0, 0] == 0.0     # self: distance 0
+    if n > 1:
+        assert (feats[1:, 0] == -1.0).all() or edges  # disconnected: -1
+
+
+def test_degenerate_engine_and_maintainer():
+    """The full engine stack stays well-defined on an edgeless graph:
+    empty workloads, zero scores, refresh a no-op."""
+    idx = _build(4, [])
+    store = SnapshotStore()
+    store.publish(idx)
+    eng = AnalyticsEngine(store, pair_sample=8)
+    s, t = eng.sample_pairs()
+    assert (s != t).all()
+    maint = eng.betweenness_maintainer((s, t), k=2)
+    assert (maint.scores() == 0.0).all()
+    top = maint.refresh()
+    assert top == [(0, 0.0), (1, 0.0)]  # deterministic id tie-break
+
+    single = _build(1, [])
+    single_store = SnapshotStore()
+    single_store.publish(single)
+    one = AnalyticsEngine(single_store)
+    assert one.sample_pairs()[0].shape == (0,)
+    assert one.betweenness().shape == (1,)
+    assert one.recommend(0) == []

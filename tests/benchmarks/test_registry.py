@@ -1,0 +1,67 @@
+"""The benchmark registry is complete: every ``paper_tables.*_table``
+emitter is registered in ``benchmarks.run.TABLES`` (so no experiment can
+silently drop out of ``--list`` / the CI smoke), and the registry only
+points at emitters that exist."""
+
+import inspect
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent.parent
+if str(ROOT) not in sys.path:  # `python -m pytest` from elsewhere
+    sys.path.insert(0, str(ROOT))
+
+from benchmarks import paper_tables, run  # noqa: E402
+
+
+def _emitters():
+    return {name for name, fn in vars(paper_tables).items()
+            if name.endswith("_table") and inspect.isfunction(fn)
+            and fn.__module__ == paper_tables.__name__}
+
+
+def test_every_emitter_is_registered():
+    registered = {spec.table for spec in run.TABLES.values()}
+    missing = _emitters() - registered
+    assert not missing, (
+        f"paper_tables emitters not in benchmarks.run.TABLES: "
+        f"{sorted(missing)} -- register them (with fast kwargs and an "
+        f"artifact if one is committed)")
+
+
+def test_registry_points_at_real_emitters():
+    for name, spec in run.TABLES.items():
+        fn = getattr(paper_tables, spec.table, None)
+        assert inspect.isfunction(fn), (name, spec.table)
+        # fast kwargs must be accepted by the emitter's signature
+        params = inspect.signature(fn).parameters
+        unknown = set(spec.fast) - set(params)
+        assert not unknown, (name, sorted(unknown))
+
+
+def test_registered_artifacts_are_committed():
+    for name, spec in run.TABLES.items():
+        if spec.artifact is None:
+            continue
+        assert (ROOT / spec.artifact).exists(), (
+            f"{name} declares artifact {spec.artifact} but the repo "
+            f"does not carry it")
+
+
+def test_list_covers_the_registry():
+    text = run.list_tables()
+    for name, spec in run.TABLES.items():
+        assert name in text and spec.table in text
+    assert "kernels" in text
+
+
+def test_unknown_selection_is_rejected():
+    argv = sys.argv
+    sys.argv = ["run", "--only", "definitely_not_a_table"]
+    try:
+        with pytest.raises(SystemExit, match="unknown table"):
+            run.main()
+    finally:
+        sys.argv = argv
